@@ -1,0 +1,309 @@
+"""Regenerate EXPERIMENTS.md from the dry-run artifacts + the perf log.
+
+Run after `python -m repro.launch.dryrun --all [--opt]`:
+  PYTHONPATH=src python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results" / "dryrun"
+
+HEADER = """# EXPERIMENTS
+
+Paper: *Demystifying the Nvidia Ampere Architecture through Microbenchmarking
+and Instruction-level Analysis* (Abdelkhalik et al., 2022).
+Target hardware: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB HBM,
+4 x ~50 GB/s ICI links per chip).  Production meshes: one pod = (16,16) over
+('data','model') = 256 chips; multi-pod = (2,16,16) over
+('pod','data','model') = 512 chips.  This container is CPU-only: every cell
+is lower()+compile()'d against ShapeDtypeStructs (no allocation), and all
+performance numbers are MODELLED from the compiled artifact per §Roofline.
+
+## §Paper-validation (the reproduction itself)
+
+The paper's experiments are reproduced as a methodology on this backend and
+as a calibration dataset:
+
+* **Table I (chain-length CPI convergence)** — `benchmarks/paper_tables.py
+  table1`: t(K)/K falls to a steady state as K grows, exactly the paper's
+  "1 instruction costs 5 cycles, >=3 cost 2" effect (here the first-call
+  inflation is dispatch overhead; the regression intercept isolates it the
+  way the paper subtracts the 2-cycle clock overhead).
+* **Table II (dependent vs independent)** — measured on this host:
+  transcendental ops show ~5x dependent/independent ratios (e.g. exp.f32
+  ~113us dep vs ~19us ind per chain step at the benchmark tile), the same
+  ILP effect the paper measures on the GPU pipelines; MXU-class ops are
+  issue-limited either way.
+* **Table III (tensor core / MXU)** — `table3`: per dtype x tile shape,
+  dependent-chain latency and throughput; the dtype hierarchy
+  (bf16 > f32) reproduces the paper's TC ordering on every backend.
+* **Table IV (memory hierarchy)** — `table4`: the pointer chase resolves
+  this host's L1/L2/DRAM at ~4.5/9.7/21-37 ns per hop; on TPU the same
+  harness (plus `kernels/microbench_chase`) resolves VMEM vs HBM, the
+  memory-space sweep that replaces the paper's .cv/.cg/.ca cache-operator
+  sweep (TPU has no hardware caches to bypass).
+* **Table V (PTX->SASS map)** — `table5`: per op class, the
+  StableHLO -> optimized-HLO expansion (e.g. softmax.f32: 16 portable ops ->
+  42 optimized ops across 6 fusions; scan8: 11 -> 28 with the while-loop
+  machinery), our analogue of the paper's instruction-mapping table,
+  verified "dynamically" on the compiled module like the paper's SASS trace.
+* The paper's OWN numbers ship as `repro/core/calibration/ampere_a100.json`;
+  unit tests (`tests/test_census_and_perfmodel.py`) check its internal
+  consistency relations (SASS expansion x per-SASS cycles == WMMA cycles;
+  dependent >= independent CPI; >=3-chain convergence) — all pass.
+
+## §Dry-run
+
+Every (architecture x shape) cell — 34 runnable cells per DESIGN.md's
+long_500k policy — is compiled for BOTH production meshes with full
+sharding: 68 baseline compilations and 68 with the beyond-paper optimization
+plan, all succeeding (`python -m repro.launch.dryrun --all [--opt]`).
+Artifacts: results/dryrun/*.json with memory_analysis, cost_analysis, the
+instruction census, itemized top collectives, and sharding-sanitation logs.
+
+Compile health: all cells lower+compile in 1.4-60s on one CPU core; scanned
+layer stacks keep the HLO small enough that the 512-way SPMD partition of a
+60-layer 236B-parameter MoE compiles in ~20s.
+
+{dryrun_table}
+
+Memory notes: `temp+args` is the modelled per-device HBM watermark.  Cells
+above 16 GiB in the BASELINE are exactly the pathological shardings the
+§Perf pass attacks (yi-34b/llava train: attention-weight replication from
+56 heads vs 16-way TP; deepseek train: EP gathers; all reduced by the
+optimization plan, e.g. yi-34b train 20.2 -> 15.0 GiB).  The remaining
+over-budget cell (deepseek-v2 train at 24.7 GiB modelled) is a known
+limitation documented in §Perf iteration D3.
+
+## §Roofline
+
+Three terms per cell, from the compiled artifact (per device):
+
+    compute_s    = census FLOPs / 197e12        (trip-count-aware census;
+                                                 XLA's cost_analysis counts
+                                                 loop bodies ONCE and is kept
+                                                 in the JSON for reference)
+    memory_s     = analytic HBM bytes / 819e9   (weights+optimizer+activation
+                                                 checkpoints+caches+logits; the
+                                                 census op-boundary bytes are
+                                                 reported as an upper bound)
+    collective_s = TPU-adjusted wire bytes / (4 x 50e9)
+                   (ring (n-1)/n factors per op; f32 collectives on values
+                    that are bf16 in the source program are halved — XLA:CPU
+                    legalizes bf16 dots to f32, which on the TPU target they
+                    are not; raw numbers retained in the JSON)
+
+`useful` = MODEL_FLOPS / census FLOPs where MODEL_FLOPS = 6·N_active·D
+(train) or 2·N_active·D (serve); it exposes remat recompute (~1.33x),
+attention quadratic terms, head-padding waste and dispatch overheads.
+`roofline%` = (MODEL_FLOPS-ideal time) / max(term) — the dry-run MFU
+analogue.  For decode cells this metric is intentionally brutal (one token's
+FLOPs against the whole machine); the bottleneck column is the informative
+part there: a healthy decode is MEMORY-bound (cache+weight streaming), and
+the §Perf pass moves the broken cells from collective- to memory-bound.
+
+### Baseline (paper-faithful sharding plan)
+
+{roofline_baseline}
+
+### Optimized (beyond-paper plan: --opt)
+
+{roofline_opt}
+
+### Baseline vs optimized (single-pod summary)
+
+{opt_compare}
+
+Reading the table:
+* Dense-TP archs whose heads divide 16 (internlm2: 48H) hit ~65% of
+  roofline at train out of the box — the framework's sharding plan is sound;
+  the interesting cells are the ones that DON'T divide.
+* Multi-pod rows halve roofline% by construction: the global batch is fixed
+  (weak scaling), so per-device MODEL_FLOPS halves while activation
+  collectives stay constant.  Cross-pod gradient traffic is the term the
+  int8 error-feedback compressor (distributed/compression.py) addresses.
+* rwkv6/hymba cells price the paper's core point: their census op mix is
+  dominated by NON-matmul VPU chains (the wkv/ssm recurrences), where
+  per-instruction latency tables — not peak FLOPs — decide the model.
+  useful>1 for rwkv6 decode (1.09) flags that 2·N·D under-counts a
+  recurrence's real work — exactly the class of model error the paper's
+  tables exist to correct.
+
+## §Perf — hillclimbing log
+
+Method: per the task spec — three cells (worst roofline fraction, most
+collective-bound, most latency/paper-representative), iterated as
+hypothesis -> change -> before/after -> confirmed/refuted.  The optimization
+plan is OFF by default (`ModelCfg` flags), so the paper-faithful baseline
+and the beyond-paper plan are both always reproducible; numerics of every
+optimization were verified exact (logit max-err 0.0) before adoption.
+
+### Cell 1: yi-34b x train_4k (worst big-model roofline; TP-pathological)
+
+* **Baseline**: compute 9.05s / memory 0.42s / collective 6.61s (adj);
+  compute-bound; roofline 47.4%; census 1.78e15 FLOPs/dev vs 8.5e14 ideal.
+* **Iteration Y1 — head padding.**  Hypothesis: 56 q-heads % 16 != 0 makes
+  the sanitizer replicate all attention weights over the model axis ->
+  replicated attention compute (x16 on those einsums) + cross-shard weight
+  grads.  Change: `head_pad_multiple=16` (64 padded heads, exact
+  original-GQA kv mapping, dead heads masked; bit-exact logits).
+  Measured: census FLOPs 1.78e15 -> 1.32e15 (-26%), per-device args
+  6.73 -> 2.73 GiB.  CONFIRMED for compute+memory; REFUTED for collectives
+  (itemization showed the dominant wires are Megatron-style activation
+  psums, not weight grads).
+* **Iteration Y2 — activation-collective width.**  Hypothesis: the
+  f32[1,4096,7168] psums (4/layer fwd+bwd x 60L x 16 accum) are bf16 on the
+  TPU target (CPU dot-legalization artifact).  Change: census
+  `collective_bytes_total_tpu` adjustment (tool-side; documented above) +
+  `cast_params_once` so FSDP weight gathers move bf16 hoisted out of the
+  accumulation loop.  Measured: adjusted collectives 2337 -> 1145 GiB/dev;
+  roofline 47.4% -> 65.6%.  CONFIRMED (the cast-hoist itself is invisible
+  on the CPU backend — XLA folds the converts into its f32 dots — a
+  TPU-only win, recorded as such).
+* **Iteration Y3 — save_attn remat policy.**  Hypothesis: keeping attention
+  outputs cuts the ~33% remat recompute.  Measured: census FLOPs -2% only
+  (attention internals must be recomputed for its own gradients regardless)
+  at +6.7 GiB temp.  REFUTED -> reverted.  Lesson: remat savings need
+  policies keyed on what the BACKWARD consumes, not on layer outputs.
+* **Net: 47.4% -> 65.6% roofline, fits 16 GiB (20.2 -> 15.0).**
+
+### Cell 2: deepseek-v2-236b x train_4k (most collective-bound)
+
+* **Baseline**: collective 24.4s dominates (compute 5.8s); roofline 10.9%.
+  Itemized: per-layer-per-microstep expert-weight FSDP gathers + the
+  all-gather that re-replicates expert outputs for the combine (the 'gather'
+  EP design), x59 layers x16 accum steps.
+* **Iteration D1 — cast_params_once + head padding**: NO measurable change.
+  REFUTED on this backend: 128 heads already divide 16, and the cast-hoist
+  is folded by CPU legalization (see Y2).  Kept (TPU-relevant), not counted.
+* **Iteration D2 — sharded-EP MoE (`moe_impl="shard"`)**.  Hypothesis:
+  activations are replicated over 'model', so expert outputs never need
+  gathering — dispatch per shard to LOCAL experts only, combine locally,
+  ONE bf16 psum of partials per layer; weight gathers become explicit
+  `jax.lax.all_gather` on bf16 values under `jax.shard_map`.
+  Napkin: AG 2x~262 MiB/layer/micro -> one 80 MiB psum (+grads RS).
+  Measured: raw collectives 6100 -> 3715 GiB/dev (-39%), step collective
+  24.4 -> 17.9s, roofline 10.9% -> 14.9%; prefill collective 3.32 -> 1.41s.
+  Numerics exact vs the dense path (max err 3.4e-8).  CONFIRMED.
+* **Iteration D3 — optimization_barrier'd bf16 weight gathers**: no change
+  measured — the f32 gathers that remain are regenerated inside the remat'd
+  backward where CPU legalization again pins f32.  REFUTED-on-CPU and
+  documented; on TPU the explicit bf16 gathers stand (estimated additional
+  ~1.9x on the weight-gather component).  Remaining known limitation: ZeRO-3
+  expert-weight streaming x accum is the irreducible term of this design
+  point; the production fix is token-sharded EP (a2a over an expert axis),
+  sketched in DESIGN.md as future work.
+* **Net: 10.9% -> 14.9% roofline at train; prefill 2.4x less collective.**
+
+### Cell 3: gemma3-1b x decode_32k (latency-critical; paper-representative —
+matmuls vanish at one token/step, so per-instruction and per-collective
+latencies dominate, the paper's exact regime)
+
+* **Baseline**: 66 ms/token modelled, COLLECTIVE-bound (12.35 GiB wire per
+  single token!); compute 0.2ms.  SPMD warnings showed "involuntary full
+  rematerialization" on every cache update.
+* **Iteration G1 — scatter cache updates.**  Hypothesis: the vmapped
+  dynamic-update-slice on the (batch, seq)-sharded KV cache forces the
+  partitioner to replicate-and-reshard the whole 32k cache each step;
+  a scatter with explicit (row, slot) indices partitions shard-locally.
+  Change: `scatter_cache_update=True` (+`mode="drop"`), decode-equivalence
+  verified exact.  Measured: wire 12.35 -> 0.21 GiB (58x), step
+  66 -> 1.1 ms/token, bottleneck flips to MEMORY — the correct regime for
+  decode.  CONFIRMED.  Same change: yi-34b decode 0.62s -> 0.021s (30x),
+  llava decode likewise.
+* **Iteration G2 — bandwidth accounting.**  With the collective fixed, the
+  step models at ~1.2 ms/token ~= (bf16 weights/16 + KV read)/819GB/s with
+  ~80% of bytes in weight streaming at batch 128: the cell is within ~2x of
+  the decode bandwidth roofline; the remaining gap is the (small) residual
+  collective.  Further levers (ring-latency hiding, weight-quantized
+  decode) are noted, not implemented.
+* **Multi-pod decode caveat** (from the full table): decoding ACROSS pods
+  pays cross-pod wire for zero model benefit — production serving should
+  replicate per pod (DP serving), which the engine supports by
+  construction; recorded as a deployment rule rather than a code change.
+
+### Beyond-paper optimizations applied fleet-wide (--opt)
+
+head padding (hymba 25->32: prefill 2.2% -> 21.7%, train 9.0% -> 17.9%),
+sharded-EP MoE (olmoe train 12.0% -> 33.5%, prefill 13.7% -> 39.3%),
+scatter cache updates (all decode cells -> memory-bound), cast-once bf16
+weight gathers (TPU-only), prefill last-token unembed (seamless prefill
+temp 63.8 -> 2.2 GiB), encoder remat + vocab sharding (seamless train 55.9 -> 4.7 GiB, roofline 12.3% -> 20.4%),
+vocab padding to /128 (seamless/hymba logits shard; was replicating
+15.6 GiB logits per device).
+
+### Stopping criterion
+
+Per the method: three consecutive <5% iterations on the dominant term.
+Y3/D3 and two accounting-only iterations closed the three cells; the
+remaining largest known lever (token-sharded a2a EP for deepseek) is
+designed but unimplemented, documented above.
+"""
+
+
+def _fmt_row(d, r):
+    frac = roofline_fraction(r)
+    return (f"| {r.arch} | {r.cell} | {r.mesh} | {r.compute_s:.3f} | "
+            f"{r.memory_s:.3f} | {r.collective_s:.3f} | {r.bottleneck} | "
+            f"{r.useful_ratio:.3f} | {100*frac:.2f}% |")
+
+
+TBL_HDR = ("| arch | cell | mesh | compute_s | memory_s | collective_s | "
+           "bottleneck | useful | roofline% |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    base_rows, opt_rows, dry_rows = [], [], []
+    pairs = {}
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        r = from_dryrun(d)
+        if "__opt" in d["mesh"]:
+            opt_rows.append(_fmt_row(d, r))
+            pairs.setdefault((d["arch"], d["cell"],
+                              d["mesh"].replace("__opt", "")), [None, None])[1] = (d, r)
+        else:
+            base_rows.append(_fmt_row(d, r))
+            pairs.setdefault((d["arch"], d["cell"], d["mesh"]),
+                             [None, None])[0] = (d, r)
+            m = d["memory_analysis"]
+            dry_rows.append(
+                f"| {d['arch']} | {d['cell']} | {d['mesh']} | "
+                f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+                f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} | "
+                f"{d['compile_s']:.1f} | {d['accum_steps']} |")
+
+    comp = ["| arch | cell | baseline RL% | opt RL% | baseline coll_s | "
+            "opt coll_s | bottleneck base -> opt |",
+            "|---|---|---|---|---|---|---|"]
+    for (arch, cell, mesh), (b, o) in sorted(pairs.items()):
+        if b is None or o is None or mesh != "pod16x16":
+            continue
+        (db, rb), (do, ro) = b, o
+        comp.append(
+            f"| {arch} | {cell} | {100*roofline_fraction(rb):.2f}% | "
+            f"{100*roofline_fraction(ro):.2f}% | {rb.collective_s:.3f} | "
+            f"{ro.collective_s:.3f} | {rb.bottleneck} -> {ro.bottleneck} |")
+
+    dry_tbl = ("| arch | cell | mesh | args GiB | temp GiB | compile s | "
+               "accum |\n|---|---|---|---|---|---|---|\n"
+               + "\n".join(dry_rows))
+    text = HEADER.format(
+        dryrun_table=dry_tbl,
+        roofline_baseline=TBL_HDR + "\n" + "\n".join(base_rows),
+        roofline_opt=TBL_HDR + "\n" + "\n".join(opt_rows),
+        opt_compare="\n".join(comp),
+    )
+    (ROOT / "EXPERIMENTS.md").write_text(text)
+    print(f"wrote EXPERIMENTS.md: {len(base_rows)} baseline rows, "
+          f"{len(opt_rows)} opt rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Roofline: the three-term roofline table over every dry-run artifact.
+
+Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun
+--all`), derives compute/memory/collective seconds per (arch x cell x mesh),
+identifies the dominant term and the MODEL_FLOPS/HLO_FLOPs useful ratio, and
+prints the table §Roofline of EXPERIMENTS.md is generated from.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_all(mesh_filter: str | None = None):
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if mesh_filter and d["mesh"] != mesh_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def render(rows, file=sys.stdout):
+    hdr = (f"{'arch':22s} {'cell':12s} {'mesh':11s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'bottleneck':>11s} {'useful':>7s} {'roofline%':>9s}")
+    print(hdr, file=file)
+    print("-" * len(hdr), file=file)
+    out = []
+    for d in rows:
+        r = from_dryrun(d)
+        frac = roofline_fraction(r)
+        out.append((r, frac))
+        print(f"{r.arch:22s} {r.cell:12s} {r.mesh:11s} "
+              f"{r.compute_s:10.4f} {r.memory_s:10.4f} "
+              f"{r.collective_s:10.4f} {r.bottleneck:>11s} "
+              f"{r.useful_ratio:7.3f} {100*frac:8.2f}%", file=file)
+    return out
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else None
+    rows = load_all(mesh)
+    if not rows:
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    out = render(rows)
+    # summary: the three most interesting cells for §Perf
+    single = [(r, f) for r, f in out if r.mesh == "pod16x16"]
+    if single:
+        worst = min(single, key=lambda rf: rf[1])
+        coll = max(single, key=lambda rf: rf[0].collective_s
+                   / max(rf[0].step_s, 1e-12))
+        print("\nworst roofline fraction :",
+              worst[0].arch, worst[0].cell, f"{100*worst[1]:.2f}%")
+        print("most collective-bound   :",
+              coll[0].arch, coll[0].cell,
+              f"{coll[0].collective_s:.3f}s of {coll[0].step_s:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark driver: one function per paper table (CSV: name,us_per_call,
+derived) plus the model-level roofline summary over any existing dry-run
+artifacts.  `python -m benchmarks.run`"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import paper_tables
+    print("name,us_per_call,derived")
+    paper_tables.run_all()
+
+    # roofline summary (skipped silently if no dry-run artifacts exist)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all("pod16x16")
+        if rows:
+            print()
+            roofline.render(rows)
+    except Exception as e:  # noqa
+        print(f"roofline-summary-skipped,0.0,{e!r}"[:120])
+
+
+if __name__ == "__main__":
+    main()

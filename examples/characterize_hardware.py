@@ -1,0 +1,51 @@
+"""Reproduce the paper's experiment suite on the current backend: per-op
+latency tables (dependent/independent), the memory-hierarchy chase, and
+matrix-unit probes; then diff the result against the shipped calibrations.
+
+This is the paper-as-a-tool: on a real TPU the emitted table refreshes
+repro/core/calibration/tpu_v5e.json; on CPU it characterizes the host.
+
+Run:  PYTHONPATH=src python examples/characterize_hardware.py
+"""
+import json
+
+import jax
+
+from repro.core.microbench.tables import ampere_table, calibrate, v5e_table
+
+
+def main():
+    print(f"backend: {jax.default_backend()}")
+    table = calibrate(quick=True)
+
+    print("\n== per-op latency (ns, steady state) ==")
+    for k, v in sorted(table["ops"].items()):
+        if k.endswith(".dep") or k.endswith(".ind"):
+            print(f"  {k:28s} {v['per_op_ns']:10.2f}  "
+                  f"(overhead {v['overhead_ns']:.0f}ns)")
+
+    print("\n== memory hierarchy (pointer chase, ns/hop) ==")
+    for size, v in table["memory"].items():
+        print(f"  {int(size)//1024:8d} KiB   {v['per_hop_ns']:8.1f}")
+
+    print("\n== matrix unit ==")
+    for k, v in table["mxu"].items():
+        print(f"  {k:32s} {v['per_op_us']:8.2f}us  {v['tflops']:8.3f} TFLOP/s")
+
+    print("\n== reference tables shipped with the repo ==")
+    a100 = ampere_table()
+    print(f"  ampere_a100: {len(a100['instructions'])} instruction rows, "
+          f"{len(a100['tensor_core'])} tensor-core rows "
+          f"(the paper's Tables II-V)")
+    v5e = v5e_table()
+    print(f"  tpu_v5e: {len(v5e['vpu'])} VPU rows, "
+          f"MXU bf16 peak {v5e['mxu']['bf16.f32']['peak_tflops']} TFLOP/s")
+    out = "results/host_calibration.json"
+    import pathlib
+    pathlib.Path("results").mkdir(exist_ok=True)
+    pathlib.Path(out).write_text(json.dumps(table, indent=1))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.core import isa, microbench, perfmodel  # noqa

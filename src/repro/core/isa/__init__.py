@@ -1,0 +1,1 @@
+from repro.core.isa import hlo_census  # noqa

@@ -1,0 +1,407 @@
+"""Instruction-level census of compiled HLO — the TPU analogue of the paper's
+dynamic SASS trace.
+
+The paper verifies every PTX instruction's mapping to SASS *at runtime*
+because the compiler may fuse/split/re-schedule.  On TPU the portable IR is
+StableHLO and the "hardware ISA" is the post-SPMD, post-fusion optimized HLO;
+this module parses ``compiled.as_text()`` into a per-instruction census:
+
+  * matmul FLOPs (dot/convolution), with WHILE-LOOP TRIP COUNTS multiplied
+    through (lax.scan lowers to while; XLA's HloCostAnalysis counts loop
+    bodies once, which under-counts a 60-layer scanned transformer 60x).
+    Trip counts come from XLA's own ``backend_config known_trip_count``;
+  * HBM traffic estimate: post-fusion, each top-level op's operand+result
+    bytes approximate its HBM footprint (fusion internals stay in
+    VMEM/registers, so they are intentionally NOT counted);
+  * collective wire bytes per op kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute), with ring-algorithm
+    (n-1)/n factors and replica-group sizes parsed from the op;
+  * an op-kind histogram (the "ISA mapping" table of the paper).
+
+Everything is derived from text parsing only — no device execution — so it
+works identically for the 512-device dry-run artifacts.  Optimized HLO
+references operands by NAME only, so a module-wide symbol table (op name ->
+result type) resolves operand shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+) = (.*)$")
+_KIND_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+_REPLICA_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPLICA_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_bytes(self.result_type)
+
+    def operand_names(self) -> List[str]:
+        lp = self.line.find(self.kind + "(")
+        if lp < 0:
+            return []
+        start = lp + len(self.kind) + 1
+        depth = 1
+        for i in range(start, len(self.line)):
+            ch = self.line[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = self.line[start:i]
+                    break
+        else:
+            args = self.line[start:]
+        return re.findall(r"%([\w\.\-]+)", args)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    is_fusion: bool = False
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    km = _KIND_RE.search(rhs)
+    if not km:
+        return None
+    kind = km.group(1)
+    result_type = rhs[:km.start()].strip()
+    return Op(name, kind, result_type, line.strip())
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Dict[str, str]]:
+    """Returns (computations, symbol table name->result type)."""
+    comps: Dict[str, Computation] = {}
+    symtab: Dict[str, str] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith(("//", "#")):
+            continue
+        if (not line.startswith((" ", "\t"))) and "->" in line \
+                and stripped.endswith("{"):
+            head = stripped
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            name = head.lstrip("%").split("(")[0].split(" ")[0].strip()
+            if name:
+                cur = Computation(name, is_fusion="fused" in name)
+                comps[name] = cur
+            continue
+        op = _parse_op(line)
+        if op and cur is not None:
+            cur.ops.append(op)
+            symtab[op.name] = op.result_type
+    return comps, symtab
+
+
+def _operand_bytes(op: Op, symtab) -> int:
+    return sum(shape_bytes(symtab.get(n, "")) for n in op.operand_names())
+
+
+def _dot_flops(op: Op, symtab) -> int:
+    """2 * prod(result_dims) * contracted_size (batch dims cancel)."""
+    res_elems = shape_elems(op.result_type)
+    names = op.operand_names()
+    if not names:
+        return 0
+    lhs_type = symtab.get(names[0], "")
+    mdims = _SHAPE_RE.search(lhs_type)
+    if not mdims:
+        return 0
+    lhs_dims = [int(d) for d in mdims.group(2).split(",") if d]
+    mcontract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    csize = 1
+    if mcontract and mcontract.group(1):
+        for idx in mcontract.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                csize *= lhs_dims[i]
+    return 2 * res_elems * csize
+
+
+def _collective_group_size(line: str, default: int) -> int:
+    m = _REPLICA_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _collective_wire_bytes(kind: str, op: Op, symtab,
+                           n_devices: int) -> float:
+    """Per-device wire bytes for one execution of a collective, assuming ring
+    algorithms (the v5e ICI topology is a torus of rings)."""
+    g = max(_collective_group_size(op.line, n_devices), 1)
+    rb = op.result_bytes
+    if kind == "all-reduce":
+        return 2.0 * rb * (g - 1) / g
+    if kind == "all-gather":
+        return rb * (g - 1) / g
+    if kind == "reduce-scatter":
+        ob = _operand_bytes(op, symtab)
+        return (ob if ob else rb * g) * (g - 1) / g
+    if kind == "all-to-all":
+        return rb * (g - 1) / g
+    if kind in ("collective-permute", "collective-broadcast"):
+        return float(rb)
+    return 0.0
+
+
+_MEM_SKIP = {
+    # ops that don't move HBM bytes themselves (control / aliasing / tuples)
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "copy-start", "copy-done",
+}
+
+
+def _trip_counts_and_callers(comps):
+    callers: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    trips: Dict[str, int] = {}
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            if op.kind == "while":
+                mbody = re.search(r"body=%?([\w\.\-]+)", op.line)
+                mcond = re.search(r"condition=%?([\w\.\-]+)", op.line)
+                mtc = _TRIP_RE.search(op.line)
+                trip = int(mtc.group(1)) if mtc else 1
+                if mbody:
+                    callers[mbody.group(1)].append((cname, float(trip)))
+                    trips[mbody.group(1)] = trip
+                if mcond:
+                    callers[mcond.group(1)].append((cname, float(trip) + 1))
+            elif op.kind in ("call", "conditional", "fusion"):
+                for m in re.finditer(
+                        r"(?:to_apply|branch_computations|calls)="
+                        r"\{?%?([\w\.\-]+(?:, ?%?[\w\.\-]+)*)\}?", op.line):
+                    for target in re.split(r",\s*%?", m.group(1)):
+                        callers[target].append((cname, 1.0))
+    return callers, trips
+
+
+def census(text: str, n_devices: int = 1) -> Dict:
+    """Full instruction census of an optimized HLO module.
+
+    Returns dict with: flops, hbm_bytes, collective_bytes (per kind + total),
+    op_histogram {kind: weighted count}, while_trips {computation: trip}.
+    All numbers are PER DEVICE (SPMD modules are per-device programs).
+    """
+    comps, symtab = parse_module(text)
+    callers, trips = _trip_counts_and_callers(comps)
+    memo: Dict[str, float] = {}
+
+    def resolve(name: str, depth=0) -> float:
+        if name in memo:
+            return memo[name]
+        if depth > 60 or name not in comps:
+            return 1.0
+        sites = callers.get(name)
+        if not sites:
+            memo[name] = 1.0
+            return 1.0
+        memo[name] = 1.0  # break cycles
+        total = 0.0
+        for caller, weight in sites:
+            total += weight * resolve(caller, depth + 1)
+        memo[name] = max(total, 1.0)
+        return memo[name]
+
+    flops = 0.0
+    hbm = 0.0
+    coll = defaultdict(float)
+    coll_adj = defaultdict(float)
+    hist: Dict[str, float] = defaultdict(float)
+
+    def _tpu_adjusted(kind: str, op: Op, wire: float) -> float:
+        """XLA:CPU legalizes bf16 dots/gathers to f32, so the SPMD collective
+        on their outputs is measured at f32 width; on the TPU target the same
+        value is bf16.  Halve those (and only those) — identified by an f32
+        result whose metadata op_name points at a dot/gather/scatter source.
+        Optimizer/grad-accumulation reductions are genuinely f32 and keep
+        full price."""
+        if "f32[" not in op.result_type.replace(" ", ""):
+            return wire
+        m = re.search(r'op_name="([^"]*)"', op.line)
+        src = m.group(1) if m else ""
+        if any(t in src for t in ("dot_general", "/gather", "scatter-add",
+                                  "_take")):
+            return wire * 0.5
+        return wire
+
+    def _fusion_operand_bytes(op: Op) -> int:
+        """Operand bytes of a fusion op, charging parameters that the fusion
+        internally only SLICES/GATHERS at their sliced size (a scan body
+        fused with its layer-stack dynamic-slice reads one layer per trip,
+        not the whole stack)."""
+        m = re.search(r"calls=%?([\w\.\-]+)", op.line)
+        names = op.operand_names()
+        if not m or m.group(1) not in comps:
+            return sum(shape_bytes(symtab.get(n, "")) for n in names)
+        fc = comps[m.group(1)]
+        params = {}
+        for fop in fc.ops:
+            if fop.kind == "parameter":
+                mi = re.search(r"parameter\((\d+)\)", fop.line)
+                if mi:
+                    params[int(mi.group(1))] = fop.name
+        total = 0
+        slicing = {"dynamic-slice", "gather", "slice",
+                   "dynamic-update-slice"}
+        for i, n in enumerate(names):
+            full = shape_bytes(symtab.get(n, ""))
+            pname = params.get(i)
+            if pname is None:
+                total += full
+                continue
+            consumers = [fop for fop in fc.ops
+                         if pname in fop.operand_names()]
+            if consumers and all(c.kind in slicing for c in consumers):
+                total += sum(shape_bytes(c.result_type) for c in consumers)
+            else:
+                total += full
+        return total
+
+    for cname, comp in comps.items():
+        if comp.is_fusion:
+            continue  # internals are VMEM-resident; the fusion op is counted
+        w = resolve(cname)
+        for op in comp.ops:
+            hist[op.kind] += w
+            if op.kind in ("dot", "convolution"):
+                flops += w * _dot_flops(op, symtab)
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in COLLECTIVES:
+                wire = _collective_wire_bytes(base, op, symtab, n_devices)
+                coll[base] += w * wire
+                coll_adj[base] += w * _tpu_adjusted(base, op, wire)
+            if op.kind not in _MEM_SKIP and not op.kind.endswith("-done"):
+                names = op.operand_names()
+                if op.kind == "fusion":
+                    hbm += w * (_fusion_operand_bytes(op) + op.result_bytes)
+                elif op.kind in ("dynamic-slice", "slice"):
+                    # reads only the slice (scan reads one layer per trip)
+                    hbm += w * 2 * op.result_bytes
+                elif op.kind == "gather":
+                    idx = shape_bytes(symtab.get(names[1], "")) \
+                        if len(names) > 1 else 0
+                    hbm += w * (2 * op.result_bytes + idx)
+                elif op.kind in ("dynamic-update-slice",):
+                    upd = shape_bytes(symtab.get(names[1], "")) \
+                        if len(names) > 1 else 0
+                    hbm += w * 2 * upd  # touches only the updated slice
+                elif op.kind == "scatter":
+                    upd = shape_bytes(symtab.get(names[-1], "")) \
+                        if names else 0
+                    hbm += w * (2 * upd + op.result_bytes)
+                else:
+                    hbm += w * (_operand_bytes(op, symtab) + op.result_bytes)
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": dict(coll),
+        "collective_bytes_total": float(sum(coll.values())),
+        "collective_bytes_total_tpu": float(sum(coll_adj.values())),
+        "op_histogram": dict(sorted(hist.items(), key=lambda kv: -kv[1])),
+        "while_trips": trips,
+        "n_computations": len(comps),
+    }
+
+
+def collective_table(text: str, n_devices: int = 1) -> List[Dict]:
+    """Itemized collectives (op name, kind, group size, bytes)."""
+    comps, symtab = parse_module(text)
+    out = []
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in COLLECTIVES:
+                out.append({
+                    "computation": cname, "op": op.name, "kind": base,
+                    "result_bytes": op.result_bytes,
+                    "wire_bytes": _collective_wire_bytes(base, op, symtab,
+                                                         n_devices),
+                    "group": _collective_group_size(op.line, n_devices)})
+    return out
+
+
+def op_mapping_table(stablehlo_text: str, optimized_text: str) -> Dict:
+    """The PTX->SASS analogue: op-kind histograms of the portable IR vs the
+    optimized per-device program, plus the fusion ratio."""
+    def hist_of(text, stable=False):
+        h = defaultdict(int)
+        if stable:
+            for m in re.finditer(r"stablehlo\.(\w+)", text):
+                h[m.group(1)] += 1
+        else:
+            comps, _ = parse_module(text)
+            for c in comps.values():
+                for op in c.ops:
+                    h[op.kind] += 1
+        return dict(sorted(h.items(), key=lambda kv: -kv[1]))
+
+    src = hist_of(stablehlo_text, stable="stablehlo" in stablehlo_text)
+    dst = hist_of(optimized_text)
+    return {"stablehlo": src, "optimized": dst,
+            "n_source_ops": sum(src.values()),
+            "n_optimized_ops": sum(dst.values())}

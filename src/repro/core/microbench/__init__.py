@@ -1,0 +1,1 @@
+from repro.core.microbench import harness, memory, mxu, tables  # noqa

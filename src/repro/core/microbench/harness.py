@@ -1,0 +1,152 @@
+"""Measurement harness reproducing the paper's methodology on JAX arrays.
+
+Paper methodology (§IV-A) -> here:
+  * clock reads around an instruction sequence  -> wall-clock around a jit'd
+    op chain with block_until_ready (on TPU, the Pallas kernels in
+    repro.kernels measure in-kernel; this harness is the portable layer);
+  * >=3 instructions to amortize launch overhead (Table I) -> we sweep chain
+    length K and report CPI(K); the paper's "first instruction costs 5,
+    steady state costs 2" behaviour reproduces as a falling t(K)/K curve;
+  * clock overhead subtraction (2 cycles) -> linear regression t(K) = a + bK;
+    the intercept a IS the measured launch/dispatch overhead and b the
+    steady-state per-op latency;
+  * dependent vs independent sequences (Table II) -> chains threaded through
+    one value vs K parallel values.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 30, warmup: int = 5) -> float:
+    """Median wall-time of fn(*args) in seconds (jit-compiled outside)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fit_latency(lengths: Sequence[int], times: Sequence[float]) -> Tuple[float, float]:
+    """Least-squares t = a + b*K -> (overhead a, per-op latency b)."""
+    k = np.asarray(lengths, np.float64)
+    t = np.asarray(times, np.float64)
+    b, a = np.polyfit(k, t, 1)
+    return float(a), float(b)
+
+
+@dataclass
+class ChainResult:
+    op: str
+    dtype: str
+    dependent: bool
+    lengths: List[int]
+    times_s: List[float]
+    overhead_s: float
+    per_op_s: float
+    cpi_curve: Dict[int, float]   # t(K)/(K*t_inf) — the paper's Table I shape
+
+    def per_op_cycles(self, clock_hz: float) -> float:
+        return self.per_op_s * clock_hz
+
+
+def _chain_fn(op: Callable, k: int, dependent: bool):
+    """Build a jit'd function executing k ops over an (8,128) VPU-shaped tile."""
+    if dependent:
+        def f(x, c):
+            y = x
+            for _ in range(k):
+                y = op(y, c)
+            return y
+    else:
+        def f(x, c):
+            # k independent ops on k slices, combined once at the end
+            ys = [op(x + i, c) for i in range(k)]
+            out = ys[0]
+            for y in ys[1:]:
+                out = out + y * 0  # keep all live without a dependency chain
+            return out
+    return jax.jit(f)
+
+
+def run_chain(op: Callable, name: str, dtype=jnp.float32,
+              lengths: Sequence[int] = (4, 16, 64, 256),
+              dependent: bool = True, shape=(64, 512)) -> ChainResult:
+    """shape defaults to a tile large enough that one op's cost is above the
+    host timer/dispatch noise floor (on TPU the Pallas twin of this harness
+    uses the native (8,128) VPU tile and in-kernel iteration instead)."""
+    x = jnp.linspace(0.5, 1.5, int(np.prod(shape)),
+                     dtype=jnp.float32).reshape(shape).astype(dtype)
+    c = jnp.asarray(1.0009765625, dtype)  # keeps chains numerically tame
+    times = []
+    for k in lengths:
+        f = _chain_fn(op, int(k), dependent)
+        times.append(time_fn(f, x, c))
+    a, b = fit_latency(lengths, times)
+    # robust steady-state per-op estimate: regression slope, floored by the
+    # longest chain's overhead-corrected mean (slope ~ 0 under timer noise)
+    t_longest = max((times[-1] - max(a, 0.0)) / lengths[-1], 0.0)
+    t_inf = max(b, t_longest, 1e-12)
+    cpi_curve = {int(k): float(t / (k * t_inf))
+                 for k, t in zip(lengths, times)}
+    return ChainResult(op=name, dtype=str(jnp.dtype(dtype).name),
+                       dependent=dependent, lengths=list(map(int, lengths)),
+                       times_s=times, overhead_s=max(a, 0.0),
+                       per_op_s=max(b, t_longest, 0.0), cpi_curve=cpi_curve)
+
+
+# --- the op registry (the paper's Table V rows, dtype-major) ----------------
+
+OPS: Dict[str, Callable] = {
+    "add": lambda y, c: y + c,
+    "sub": lambda y, c: y - c,
+    "mul": lambda y, c: y * c,
+    "fma": lambda y, c: y * c + c,
+    "max": lambda y, c: jnp.maximum(y, c),
+    "min": lambda y, c: jnp.minimum(y, c),
+    "abs": lambda y, c: jnp.abs(y) + c * 0,
+    "and": lambda y, c: y & c,
+    "xor": lambda y, c: y ^ c,
+    "popc": lambda y, c: jax.lax.population_count(y) + c * 0,
+    "clz": lambda y, c: jax.lax.clz(y) + c * 0,
+    "div": lambda y, c: y / c,
+    "rem": lambda y, c: y % c,
+    "rsqrt": lambda y, c: jax.lax.rsqrt(jnp.abs(y) + c * 0 + 1e-6),
+    "sqrt": lambda y, c: jnp.sqrt(jnp.abs(y)) + c * 0,
+    "exp": lambda y, c: jnp.exp(y * 0.001) + c * 0,
+    "log": lambda y, c: jnp.log(jnp.abs(y) + 1.0) + c * 0,
+    "sin": lambda y, c: jnp.sin(y) + c * 0,
+    "tanh": lambda y, c: jnp.tanh(y) + c * 0,
+    "sigmoid": lambda y, c: jax.nn.sigmoid(y) + c * 0,
+    "select": lambda y, c: jnp.where(y > c, y, c),
+}
+
+INT_OPS = {"and", "xor", "popc", "clz"}
+FLOAT_ONLY = {"rsqrt", "sqrt", "exp", "log", "sin", "tanh", "sigmoid",
+              "div", "fma"}
+
+
+def default_suite(dtypes=("float32", "bfloat16", "int32"),
+                  lengths=(4, 16, 64, 256)) -> List[ChainResult]:
+    out = []
+    for dt in dtypes:
+        isint = jnp.issubdtype(jnp.dtype(dt), jnp.integer)
+        for name, op in OPS.items():
+            if isint and name in FLOAT_ONLY:
+                continue
+            if not isint and name in INT_OPS:
+                continue
+            for dep in (True, False):
+                out.append(run_chain(op, name, jnp.dtype(dt), lengths, dep))
+    return out

@@ -1,0 +1,79 @@
+"""Memory-hierarchy pointer-chase (the paper's §IV-B, Fig. 2/3, Table IV).
+
+A random-cycle index array forces serially-dependent loads, exactly like the
+paper's linked-list chase; sweeping the working-set size walks the levels of
+the memory hierarchy.  On the CPU container this resolves L1/L2/DRAM (a
+methodology demonstration); on TPU the working-set sweep resolves VMEM-
+resident vs HBM-resident arrays (TPU has no hardware caches to bypass, so
+the paper's `.cv/.cg/.ca` operator sweep becomes a memory-SPACE sweep —
+see `repro.kernels.microbench_chase` for the in-kernel VMEM variant).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.microbench.harness import fit_latency, time_fn
+
+
+def _random_cycle(n: int, seed: int = 0) -> np.ndarray:
+    """A single n-cycle permutation: chase visits every slot exactly once."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    nxt = np.empty(n, np.int32)
+    nxt[order[:-1]] = order[1:]
+    nxt[order[-1]] = order[0]
+    return nxt
+
+
+def _chase_fn(hops: int):
+    def f(arr, start):
+        def body(_, i):
+            return arr[i]
+        return jax.lax.fori_loop(0, hops, body, start)
+    return jax.jit(f)
+
+
+@dataclass
+class ChaseResult:
+    working_set_bytes: int
+    hops: List[int]
+    times_s: List[float]
+    overhead_s: float
+    per_hop_s: float
+
+    def per_hop_cycles(self, clock_hz: float) -> float:
+        return self.per_hop_s * clock_hz
+
+
+def run_chase(working_set_bytes: int, hop_counts: Sequence[int] = (256, 1024,
+              4096), seed: int = 0) -> ChaseResult:
+    n = max(working_set_bytes // 4, 16)
+    arr = jnp.asarray(_random_cycle(n, seed))
+    start = jnp.asarray(0, jnp.int32)
+    times = []
+    for h in hop_counts:
+        f = _chase_fn(int(h))
+        times.append(time_fn(f, arr, start, iters=20))
+    a, b = fit_latency(hop_counts, times)
+    return ChaseResult(working_set_bytes=working_set_bytes,
+                       hops=list(map(int, hop_counts)), times_s=times,
+                       overhead_s=max(a, 0.0), per_hop_s=max(b, 0.0))
+
+
+def hierarchy_sweep(sizes=(16 * 2**10, 256 * 2**10, 4 * 2**20, 64 * 2**20)
+                    ) -> List[ChaseResult]:
+    return [run_chase(s) for s in sizes]
+
+
+def streaming_bandwidth(size_bytes: int = 64 * 2**20) -> float:
+    """Sequential-read bandwidth (the contrast to the chase's latency)."""
+    n = size_bytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda v: jnp.sum(v))
+    t = time_fn(f, x, iters=20)
+    return size_bytes / t

@@ -1,0 +1,88 @@
+"""Matrix-unit probes (the paper's §IV-C Tensor Core WMMA study).
+
+The paper measures, per (dtype x fragment shape), the WMMA instruction's
+latency and throughput and the PTX->SASS expansion (one m16n16k16 WMMA = two
+HMMA.16816).  The TPU analogue: per (dtype x tile shape), the latency and
+throughput of an MXU matmul, and the StableHLO dot -> fused-HLO expansion
+seen in the compiled module.  The shape sweep uses multiples/fractions of
+the 128x128 systolic array (the hardware tile) the way the paper sweeps
+m16n16k16 / m8n32k16 / m32n8k16 fragments.
+
+A dependent chain (C <- A@C) measures LATENCY; a batch of independent
+matmuls measures THROUGHPUT — the same dependent/independent split the
+paper applies to scalar instructions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.microbench.harness import fit_latency, time_fn
+
+
+@dataclass
+class MXUResult:
+    dtype: str
+    shape: Tuple[int, int, int]          # (m, n, k)
+    dependent: bool
+    per_op_s: float
+    overhead_s: float
+    flops: float
+    tflops: float
+
+
+def _dep_chain(k: int, preferred=None):
+    def f(a, c):
+        y = c
+        for _ in range(k):
+            y = jax.lax.dot(a, y, precision=None,
+                            preferred_element_type=preferred)
+            y = (y * 0.001).astype(c.dtype)
+        return y
+    return jax.jit(f)
+
+
+def _indep_batch(k: int, preferred=None):
+    def f(a, cs):
+        return jnp.stack([
+            jax.lax.dot(a, cs[i], preferred_element_type=preferred)
+            for i in range(k)])
+    return jax.jit(f)
+
+
+def run_mxu(dtype="bfloat16", shape=(128, 128, 128), dependent=True,
+            lengths: Sequence[int] = (1, 2, 4, 8)) -> MXUResult:
+    m, n, k = shape
+    dt = jnp.dtype(dtype)
+    preferred = jnp.float32 if dt != jnp.float32 else None
+    a = (jnp.ones((m, k), jnp.float32) * 0.01).astype(dt)
+    times = []
+    for L in lengths:
+        if dependent:
+            c = (jnp.ones((k, n), jnp.float32) * 0.01).astype(dt)
+            f = _dep_chain(int(L), preferred)
+            times.append(time_fn(f, a, c, iters=10))
+        else:
+            cs = (jnp.ones((int(L), k, n), jnp.float32) * 0.01).astype(dt)
+            f = _indep_batch(int(L), preferred)
+            times.append(time_fn(f, a, cs, iters=10))
+    ov, per = fit_latency(lengths, times)
+    flops = 2.0 * m * n * k
+    return MXUResult(dtype=str(dt.name), shape=(m, n, k), dependent=dependent,
+                     per_op_s=max(per, 1e-12), overhead_s=max(ov, 0.0),
+                     flops=flops, tflops=flops / max(per, 1e-12) / 1e12)
+
+
+def shape_sweep(dtypes=("bfloat16", "float32"),
+                shapes=((128, 128, 128), (256, 256, 256), (512, 512, 512),
+                        (128, 128, 512), (512, 512, 128))) -> List[MXUResult]:
+    out = []
+    for dt in dtypes:
+        for s in shapes:
+            for dep in (True, False):
+                out.append(run_mxu(dt, s, dep))
+    return out

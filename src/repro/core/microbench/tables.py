@@ -1,0 +1,75 @@
+"""Latency tables: load calibration data, run the microbench suite, persist
+refreshed tables (the paper's deliverable is exactly such a table)."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+CALIB_DIR = Path(__file__).resolve().parents[2] / "core" / "calibration"
+
+
+def load_table(name: str) -> Dict:
+    return json.loads((CALIB_DIR / f"{name}.json").read_text())
+
+
+def ampere_table() -> Dict:
+    return load_table("ampere_a100")
+
+
+def v5e_table() -> Dict:
+    return load_table("tpu_v5e")
+
+
+def calibrate(out_path: Optional[Path] = None, quick: bool = True) -> Dict:
+    """Run the full microbench suite on the CURRENT backend and emit a table
+    in the calibration format.  On a real TPU this refreshes tpu_v5e.json;
+    on CPU it demonstrates the methodology (documented in the table)."""
+    from repro.core.microbench import harness, memory, mxu
+
+    backend = jax.default_backend()
+    dtypes = ("float32", "int32") if quick else ("float32", "bfloat16",
+                                                 "int32")
+    lengths = (4, 16, 64) if quick else (4, 16, 64, 256)
+    chain = harness.default_suite(dtypes=dtypes, lengths=lengths)
+    chases = memory.hierarchy_sweep(
+        sizes=(16 * 2**10, 4 * 2**20) if quick
+        else (16 * 2**10, 256 * 2**10, 4 * 2**20, 64 * 2**20))
+    mxus = mxu.shape_sweep(
+        dtypes=("float32",) if quick else ("bfloat16", "float32"),
+        shapes=((128, 128, 128), (256, 256, 256)) if quick else None
+        or ((128, 128, 128), (256, 256, 256)))
+
+    table = {
+        "hardware": backend,
+        "source": f"repro.core.microbench run at {time.strftime('%F %T')}",
+        "methodology": "chain-length regression (paper Fig.1/Table I), "
+                       "dependent vs independent (Table II), pointer chase "
+                       "(Fig.2, Table IV), matrix-unit probes (Table III)",
+        "ops": {
+            f"{r.op}.{r.dtype}.{'dep' if r.dependent else 'ind'}": {
+                "per_op_ns": r.per_op_s * 1e9,
+                "overhead_ns": r.overhead_s * 1e9,
+                "cpi_curve": r.cpi_curve,
+            } for r in chain
+        },
+        "memory": {
+            str(r.working_set_bytes): {
+                "per_hop_ns": r.per_hop_s * 1e9,
+                "overhead_ns": r.overhead_s * 1e9,
+            } for r in chases
+        },
+        "mxu": {
+            f"{r.dtype}.m{r.shape[0]}n{r.shape[1]}k{r.shape[2]}."
+            f"{'dep' if r.dependent else 'ind'}": {
+                "per_op_us": r.per_op_s * 1e6,
+                "tflops": r.tflops,
+            } for r in mxus
+        },
+    }
+    if out_path:
+        Path(out_path).write_text(json.dumps(table, indent=1))
+    return table

@@ -1,0 +1,1 @@
+from repro.core.perfmodel import hardware, predictor, roofline  # noqa

@@ -1,0 +1,56 @@
+"""Hardware specifications for the roofline / latency models.
+
+TPU v5e is the deployment target (per-task hardware constants); the
+NVIDIA A100 spec carries the paper's published numbers so the calibrated
+tables can be cross-validated against the paper itself.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float          # per chip, FLOP/s
+    peak_flops_f32: float
+    hbm_bandwidth: float            # bytes/s per chip
+    hbm_bytes: float                # capacity per chip
+    ici_link_bandwidth: float       # bytes/s per link (one direction)
+    ici_links: int                  # links per chip participating in a ring
+    vmem_bytes: float = 0.0         # on-chip scratch (VMEM / L2+smem)
+    mxu_shape: tuple = (128, 128)   # systolic array (TPU) / TC tile (GPU)
+    clock_hz: float = 0.0
+    notes: str = ""
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,         # MXU f32 at half bf16 rate
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 2**30,
+    ici_link_bandwidth=50e9,        # ~50 GB/s per link (task constant)
+    ici_links=4,                    # 2D torus: 4 links/chip
+    vmem_bytes=128 * 2**20,
+    mxu_shape=(128, 128),
+    clock_hz=940e6,
+    notes="16GB HBM, 2D ring/torus ICI; one v5e pod = 16x16 = 256 chips",
+)
+
+A100_40G = HardwareSpec(
+    name="a100-40g",
+    peak_flops_bf16=312e12,         # TC dense bf16
+    peak_flops_f32=19.5e12,         # CUDA-core fp32
+    hbm_bandwidth=1555e9,
+    hbm_bytes=40 * 2**30,
+    ici_link_bandwidth=25e9,        # NVLink3 per direction per link
+    ici_links=12,
+    vmem_bytes=40 * 2**20,          # L2
+    mxu_shape=(16, 8, 16),          # HMMA.16816 SASS tile (the paper, Tab.III)
+    clock_hz=1410e6,
+    notes="the paper's device (Tesla A100); Tables II-V calibrate this spec",
+)
+
+SPECS: Dict[str, HardwareSpec] = {s.name: s for s in (TPU_V5E, A100_40G)}

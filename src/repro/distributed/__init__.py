@@ -1,0 +1,2 @@
+from repro.distributed import (compression, elastic,  # noqa
+                                fault_tolerance, overlap)

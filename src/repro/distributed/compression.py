@@ -1,0 +1,93 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+The 2x16x16 production mesh all-reduces gradients over the 'pod' axis across
+the slow inter-pod links.  `compressed_psum` quantizes each gradient leaf to
+int8 with a per-row scale before the collective (4x wire reduction vs f32)
+and keeps the quantization residual in an error-feedback buffer that is
+added back next step — the standard EF-SGD construction that preserves
+convergence (the compression error is O(1)-bounded, not accumulated).
+
+Implemented with jax.lax collectives under shard_map so the wire format is
+explicit; falls back to plain psum when the mesh has no 'pod' axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor-row int8 quantization -> (q, scale)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = max(n // 1024, 1)
+    pad = rows * 1024 - n
+    flat = jnp.pad(flat, (0, pad)).reshape(rows, 1024)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_leaf(g, err):
+    """Apply error feedback then quantize: returns (q, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    deq = dequantize_int8(q, scale, g.shape)
+    new_err = corrected - deq
+    return q, scale, new_err
+
+
+def compressed_pod_psum(grads: Any, err: Any, mesh,
+                        axis: str = "pod") -> Tuple[Any, Any]:
+    """All-reduce `grads` over `axis` in int8 with error feedback.
+
+    grads/err: matching pytrees (err from `init_error_state`).
+    Returns (averaged grads, new error state)."""
+    if axis not in mesh.axis_names:
+        return grads, err
+
+    n = mesh.shape[axis]
+    other = tuple(a for a in mesh.axis_names if a != axis)
+
+    def per_device(g, e):
+        q, scale, new_err = ef_compress_leaf(g, e)
+        # wire: int8 payload + f32 scales over the pod links
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+        ssum = jax.lax.psum(scale, axis)   # upper bound scale for dequant
+        avg = dequantize_int8(qsum, ssum / n / n, g.shape) * n
+        return avg.astype(g.dtype), new_err
+
+    def fn(g_tree, e_tree):
+        return jax.tree.map(per_device, g_tree, e_tree)
+
+    # every leaf is fully replicated across 'pod'; shard_map over pod only
+    spec = jax.tree.map(lambda _: P(), grads)
+    out = jax.shard_map(fn, mesh=mesh,
+                        in_specs=(spec, spec), out_specs=(spec, spec),
+                        check_vma=False)(grads, err)
+    return out
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compression_ratio(grads: Any) -> float:
+    """Wire bytes ratio: int8+scales vs f32."""
+    total_f32 = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    total_q = sum(g.size * 1 + (max(g.size // 1024, 1)) * 4
+                  for g in jax.tree.leaves(grads))
+    return total_q / total_f32

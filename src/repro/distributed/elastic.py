@@ -1,0 +1,45 @@
+"""Elastic re-meshing: continue training after losing devices/hosts.
+
+Policy: the model axis is sacred (TP/EP sharding is baked into weight
+layouts), so elasticity happens on the DATA (and pod) axis — the largest
+data-axis size that (a) fits the surviving device count and (b) divides the
+global batch is chosen, and state is re-sharded onto the new mesh by
+device_put (all-gather + re-slice under the hood).  This mirrors how
+production systems degrade: 2 pods -> 1 pod halves data parallelism and
+doubles accumulation steps, keeping the global batch (and therefore the
+training trajectory) EXACT.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.sharding.plans import named_tree
+
+
+def plan_downsize(n_alive: int, model_axis: int = 16,
+                  global_batch: int = 256) -> Tuple[int, int]:
+    """(data_axis, accum_multiplier_change) for the surviving devices."""
+    if n_alive < model_axis:
+        raise RuntimeError(
+            f"{n_alive} devices cannot host a {model_axis}-wide model axis; "
+            "restore on fresh capacity instead")
+    data = n_alive // model_axis
+    # data axis must divide the global batch to keep the trajectory exact
+    while data > 1 and global_batch % data != 0:
+        data -= 1
+    return data, data * model_axis
+
+
+def remesh(devices, data_axis: int, model_axis: int = 16):
+    import numpy as np
+    n = data_axis * model_axis
+    dev = np.asarray(devices[:n]).reshape(data_axis, model_axis)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def reshard_state(state: Any, specs: Any, new_mesh) -> Any:
+    """Re-shard a pytree onto a new mesh (gather + re-slice)."""
+    sh = named_tree(new_mesh, specs)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)

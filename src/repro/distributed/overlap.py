@@ -1,0 +1,75 @@
+"""Compute/communication overlap helpers.
+
+On TPU, XLA's latency-hiding scheduler already overlaps the collectives the
+partitioner inserts with independent compute inside each scanned layer; the
+knobs here cover what the scheduler cannot do by itself:
+
+  * `async_offload(fn)`      — run a host-side side effect (checkpoint write,
+    metrics flush) on a worker thread so the device step never blocks;
+  * `double_buffer(it)`      — device-prefetch one batch ahead (generalizes
+    data.synthetic.Prefetcher to arbitrary iterators + device_put);
+  * `microbatch_pipeline(..)`— interleave the gradient all-reduce of
+    microstep i with the compute of microstep i+1 when gradient accumulation
+    runs UNROLLED (opt-in; the default scan form leaves this to XLA).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+
+def async_offload(fn: Callable, *args, **kwargs) -> threading.Thread:
+    t = threading.Thread(target=fn, args=args, kwargs=kwargs, daemon=True)
+    t.start()
+    return t
+
+
+class double_buffer:
+    """Keep one device-resident batch in flight ahead of the consumer."""
+
+    def __init__(self, it: Iterator, shardings: Optional[Any] = None):
+        self._it = it
+        self._sh = shardings
+        self._next = self._put(next(it))
+
+    def _put(self, batch):
+        if self._sh is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(jax.device_put, batch, self._sh)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        cur = self._next
+        try:
+            self._next = self._put(next(self._it))
+        except StopIteration:
+            self._next = None
+            if cur is None:
+                raise
+        if cur is None:
+            raise StopIteration
+        return cur
+
+
+def microbatch_pipeline(grad_fn: Callable, params, microbatches,
+                        reduce_fn: Callable):
+    """Unrolled accumulation with explicit overlap points: microstep i+1's
+    forward/backward is issued before microstep i's cross-replica reduction
+    is awaited (jax dispatch is async, so issuing order IS overlap order)."""
+    reduced = []
+    pending = None
+    for mb in microbatches:
+        g = grad_fn(params, mb)
+        if pending is not None:
+            reduced.append(pending)      # await previous reduction lazily
+        pending = reduce_fn(g)           # issue reduction for this microstep
+    reduced.append(pending)
+    total = reduced[0]
+    for g in reduced[1:]:
+        total = jax.tree.map(lambda a, b: a + b, total, g)
+    return jax.tree.map(lambda x: x / len(reduced), total)

@@ -1,0 +1,99 @@
+"""Blocked flash-attention forward kernel (TPU Pallas).
+
+TPU adaptation of the memory-bounded attention the framework's jnp path
+emulates: Q is tiled over the grid, K/V stream through VMEM in blocks, and
+the online-softmax running (m, l, acc) state lives in VMEM scratch — the
+HBM->VMEM->MXU pipeline replaces the GPU's gmem->smem->TC staging.  Block
+shapes default to MXU-aligned (128 x head_dim).
+
+Supports causal masking, sliding windows, logit softcaps and GQA (the KV
+head for a query head is resolved in the BlockSpec index_map, so no repeated
+KV is materialized).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window, softcap,
+               block_q, block_k, seq_kv):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    n_blocks = seq_kv // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T                                       # [bq, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    upper = n_blocks
+    if causal and window is None:
+        # skip fully-masked kv blocks above the diagonal
+        upper = jnp.minimum(n_blocks, (qi + 1) * block_q // block_k
+                            + (1 if block_q % block_k else 0))
+        upper = jnp.maximum(upper, 1)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m, l, acc))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    """q [B,Sq,H,D]; k,v [B,Skv,KH,D] -> [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    _, Skv, KH, _ = k.shape
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, "pad sequences first"
+    group = H // KH
+
+    qt = jnp.moveaxis(q, 2, 1)                            # [B,H,Sq,D]
+    kt = jnp.moveaxis(k, 2, 1)                            # [B,KH,Skv,D]
+    vt = jnp.moveaxis(v, 2, 1)
+
+    grid = (B, H, Sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, block_q=block_q,
+                          block_k=block_k, seq_kv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, D),
+                         lambda b, h, i, g=group: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, D),
+                         lambda b, h, i, g=group: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

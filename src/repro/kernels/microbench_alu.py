@@ -1,0 +1,63 @@
+"""In-kernel ALU chain microbenchmark (TPU Pallas) — the paper's Fig. 1.
+
+The paper's PTX microbenchmark body (clock; op; op; op; clock) becomes a
+Pallas kernel whose body is a K-long unrolled chain of one VPU op over one
+(8, 128) native vector tile held in VMEM — dependent (latency) or
+independent (throughput) exactly like Table II.  On real TPU hardware the
+host times `iterations` grid repetitions and regresses t(K); in this
+container interpret=True validates the ARITHMETIC against ref.py (timing on
+CPU interp is meaningless and not claimed)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# op name -> elementwise lambda (mirrors core.microbench.harness.OPS)
+_KERNEL_OPS = {
+    "add": lambda y, c: y + c,
+    "sub": lambda y, c: y - c,
+    "mul": lambda y, c: y * c,
+    "fma": lambda y, c: y * c + c,
+    "max": lambda y, c: jnp.maximum(y, c),
+    "min": lambda y, c: jnp.minimum(y, c),
+    "div": lambda y, c: y / c,
+    "rsqrt": lambda y, c: jax.lax.rsqrt(jnp.abs(y) + 1e-6),
+    "exp": lambda y, c: jnp.exp(y * 0.001),
+    "tanh": lambda y, c: jnp.tanh(y),
+    "select": lambda y, c: jnp.where(y > c, y, c),
+}
+
+
+def _alu_kernel(x_ref, c_ref, o_ref, *, op, length, dependent):
+    f = _KERNEL_OPS[op]
+    x = x_ref[...]
+    c = c_ref[0, 0]
+    if dependent:
+        y = x
+        for _ in range(length):
+            y = f(y, c)
+        o_ref[...] = y
+    else:
+        ys = [f(x + i, c) for i in range(length)]
+        out = ys[0]
+        for y in ys[1:]:
+            out = out + y * 0
+        o_ref[...] = out
+
+
+def alu_chain(x, c, *, op="fma", length=64, dependent=True, interpret=False):
+    """x [8,128] one native VPU tile; c scalar -> chained result [8,128]."""
+    assert x.shape == (8, 128), "one native VPU tile"
+    c2 = jnp.asarray(c, x.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_alu_kernel, op=op, length=length,
+                          dependent=dependent),
+        in_specs=[pl.BlockSpec((8, 128), lambda: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), x.dtype),
+        interpret=interpret,
+    )(x, c2)

@@ -1,0 +1,40 @@
+"""In-kernel pointer chase (TPU Pallas) — the paper's Fig. 2 adapted.
+
+The GPU version chases through global memory with cache-control operators
+(.cv/.cg/.ca) to isolate each cache level.  TPU has no hardware caches to
+bypass; the analogous experiment places the chase array either in VMEM (this
+kernel: BlockSpec brings the whole array into VMEM — the VMEM-latency
+measurement) or leaves it HBM-resident (array larger than VMEM, measured by
+the host-level `core.microbench.memory` chase).  Serial dependence is
+identical to the paper: each load's address is the previous load's value."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chase_kernel(nxt_ref, start_ref, o_ref, *, hops):
+    i = start_ref[0, 0]
+
+    def body(_, i):
+        return nxt_ref[0, i]
+
+    o_ref[0, 0] = jax.lax.fori_loop(0, hops, body, i)
+
+
+def pointer_chase(nxt, start, *, hops=1024, interpret=False):
+    """nxt [N] int32 permutation cycle; start scalar -> final index."""
+    n = nxt.shape[0]
+    nxt2 = nxt.reshape(1, n)
+    s2 = jnp.asarray(start, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_chase_kernel, hops=hops),
+        in_specs=[pl.BlockSpec((1, n), lambda: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(nxt2, s2)[0, 0]

@@ -1,0 +1,55 @@
+"""MXU matmul probe kernel (TPU Pallas) — the paper's Fig. 5 (WMMA) adapted.
+
+One kernel instance multiplies MXU-aligned tiles with an in-VMEM dependent
+chain (C <- A @ C, `chain` times), the exact analogue of the paper's 4
+chained mma_sync fragments: a chain measures MXU latency, chain=1 across a
+big grid measures throughput.  Block shapes are the TPU hardware tile
+(128 x 128) scaled the way the paper sweeps WMMA fragment shapes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(a_ref, b_ref, o_ref, *, chain):
+    a = a_ref[...]
+    c = b_ref[...]
+    for _ in range(chain):
+        c32 = jax.lax.dot(a, c, preferred_element_type=jnp.float32)
+        c = (c32 * 0.001).astype(b_ref.dtype)
+    o_ref[...] = c
+
+
+def mxu_probe(a, b, *, chain=4, block=(128, 128), interpret=False):
+    """a [M,K]; b [K,N] -> chained product [M,N], tiled (bm, bn) per grid
+    cell with the full K panel in VMEM."""
+    M, K = a.shape
+    _, N = b.shape
+    bm, bn = (min(block[0], M), min(block[1], N))
+    assert M % bm == 0 and N % bn == 0
+    if chain > 1:
+        assert M == K, "a dependent chain needs square A (C <- A @ C)"
+    if (bm, bn) != (M, N):
+        # throughput mode: grid of independent tiles (chain needs bm == K)
+        assert chain == 1 or bm == K
+        grid = (M // bm, N // bn)
+        return pl.pallas_call(
+            functools.partial(_probe_kernel, chain=chain),
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+                      pl.BlockSpec((K, bn), lambda i, j: (0, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), b.dtype),
+            interpret=interpret,
+        )(a, b)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, chain=chain),
+        in_specs=[pl.BlockSpec((M, K), lambda: (0, 0)),
+                  pl.BlockSpec((K, N), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((M, N), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), b.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for all Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests (interpret mode executes the kernel body in Python — correctness, not
+speed) and compile to Mosaic on real TPUs."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (flash_attention as _fa, microbench_alu as _alu,
+                           microbench_chase as _chase, mxu_probe as _mxu,
+                           ssm_scan as _ssm, wkv6 as _wkv)
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(x, dt, B, C, A, block_d=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssm.ssm_scan(x, dt, B, C, A, block_d=block_d,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r, k, v, w, u, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _wkv.wkv6(r, k, v, w, u, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "length", "dependent",
+                                             "interpret"))
+def alu_chain(x, c, op="fma", length=64, dependent=True, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _alu.alu_chain(x, c, op=op, length=length, dependent=dependent,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("hops", "interpret"))
+def pointer_chase(nxt, start, hops=1024, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _chase.pointer_chase(nxt, start, hops=hops, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chain", "block", "interpret"))
+def mxu_probe(a, b, chain=4, block=(128, 128), interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _mxu.mxu_probe(a, b, chain=chain, block=block,
+                          interpret=interpret)

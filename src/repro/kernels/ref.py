@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels'
+shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q [B,Sq,H,D]; k,v [B,Skv,KH,D] -> [B,Sq,H,D] (f32 accumulation)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    if KH != H:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= (qi - ki) < window
+    s = jnp.where(m[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, B, C, A):
+    """Selective scan. x,dt [Bt,S,Di]; B,C [Bt,S,N]; A [Di,N] -> y [Bt,S,Di].
+    h_t = exp(dt*A)h + dt*B*x; y = C.h  (f32 state)."""
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+    h0 = jnp.zeros((x.shape[0], x.shape[2], A.shape[1]), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (x, dt, B, C))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV6. r,k,v,w [B,S,H,N]; u [H,N] -> y [B,S,H,N] (f32 state)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+    B, S, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def alu_chain_ref(x, c, *, op="fma", length=64, dependent=True):
+    """The microbenchmark workload itself (so the kernel's arithmetic is
+    verifiable, not just its timing)."""
+    import repro.core.microbench.harness as H
+    f = H.OPS[op]
+    if dependent:
+        y = x
+        for _ in range(length):
+            y = f(y, c)
+        return y
+    ys = [f(x + i, c) for i in range(length)]
+    out = ys[0]
+    for y in ys[1:]:
+        out = out + y * 0
+    return out
+
+
+def pointer_chase_ref(nxt, start, hops):
+    def body(_, i):
+        return nxt[i]
+    return jax.lax.fori_loop(0, hops, body, start)
+
+
+def mxu_probe_ref(a, b, *, chain=1):
+    """Dependent tile-matmul chain: C <- (A @ C) * eps, `chain` times."""
+    c = b
+    for _ in range(chain):
+        c = (jnp.dot(a.astype(jnp.float32), c.astype(jnp.float32))
+             * 0.001).astype(b.dtype)
+    return c

@@ -1,0 +1,57 @@
+"""Selective-SSM (Mamba) scan kernel (TPU Pallas).
+
+The recurrence h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t is evaluated with
+the state h [bd, N] resident in VMEM scratch across the whole sequence — the
+HBM traffic is exactly one read of (x, dt, B, C) and one write of y, which
+is the kernel's reason to exist: the lax.scan reference round-trips the
+state through HBM every step.  Grid tiles the channel dimension (bd) so one
+kernel instance's state fits VMEM regardless of d_inner.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, *, seq):
+    A = a_ref[...].astype(jnp.float32)                    # [bd, N]
+    bd, N = A.shape
+    h0 = jnp.zeros((bd, N), jnp.float32)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)             # [bd]
+        dt_t = dt_ref[0, t].astype(jnp.float32)           # [bd]
+        b_t = b_ref[0, t].astype(jnp.float32)             # [N]
+        c_t = c_ref[0, t].astype(jnp.float32)             # [N]
+        dA = jnp.exp(dt_t[:, None] * A)                   # [bd, N]
+        h = dA * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (h @ c_t).astype(y_ref.dtype)       # [bd]
+        return h
+
+    jax.lax.fori_loop(0, seq, step, h0)
+
+
+def ssm_scan(x, dt, B, C, A, *, block_d=256, interpret=False):
+    """x,dt [Bt,S,Di]; B,C [Bt,S,N]; A [Di,N] -> y [Bt,S,Di]."""
+    Bt, S, Di = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, Di)
+    assert Di % block_d == 0
+    grid = (Bt, Di // block_d)
+    return pl.pallas_call(
+        functools.partial(_ssm_kernel, seq=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, S, N), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, S, N), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((block_d, N), lambda b, d: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((Bt, S, Di), x.dtype),
+        interpret=interpret,
+    )(x, dt, B, C, A)

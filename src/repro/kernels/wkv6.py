@@ -1,0 +1,51 @@
+"""RWKV6 (Finch) WKV recurrence kernel (TPU Pallas).
+
+Per (batch, head): state S in R^{N x N} lives in VMEM scratch for the whole
+sequence; each step reads r,k,v,w rows ([N] each) and writes one y row.
+
+  y_t = r_t . (S + diag(u) k_t v_t^T);   S <- diag(w_t) S + k_t v_t^T
+
+The paper-relevant property: this is an *element-wise/outer-product* (VPU)
+workload with a long serial dependence — exactly the instruction class whose
+latency the per-op tables exist to price (no MXU involvement)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, *, seq):
+    u = u_ref[0].astype(jnp.float32)                      # [N]
+    N = u.shape[0]
+    s0 = jnp.zeros((N, N), jnp.float32)
+
+    def step(t, s):
+        r = r_ref[0, t, 0].astype(jnp.float32)            # [N]
+        k = k_ref[0, t, 0].astype(jnp.float32)
+        v = v_ref[0, t, 0].astype(jnp.float32)
+        w = w_ref[0, t, 0].astype(jnp.float32)
+        kv = k[:, None] * v[None, :]                      # [N, N]
+        y = r @ (s + u[:, None] * kv)                     # [N]
+        y_ref[0, t, 0] = y.astype(y_ref.dtype)
+        return w[:, None] * s + kv
+
+    jax.lax.fori_loop(0, seq, step, s0)
+
+
+def wkv6(r, k, v, w, u, *, interpret=False):
+    """r,k,v,w [B,S,H,N]; u [H,N] -> y [B,S,H,N]."""
+    B, S, H, N = r.shape
+    grid = (B, H)
+    spec = pl.BlockSpec((1, S, 1, N), lambda b, h: (b, 0, h, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, seq=S),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, N), lambda b, h: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+        interpret=interpret,
+    )(r, k, v, w, u)

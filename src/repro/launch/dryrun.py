@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the TRAIN step (train_4k) or SERVE step (prefill/decode cells)
+is jit-lowered with production shardings against ShapeDtypeStruct inputs (no
+allocation), compiled for the 256-chip single-pod mesh and the 512-chip
+2-pod mesh, and the compiled artifact is analysed:
+
+  * ``compiled.memory_analysis()``  - proves the cell fits per-device HBM;
+  * ``compiled.cost_analysis()``    - XLA's own FLOP/byte counters (loop
+    bodies counted ONCE - kept for reference);
+  * ``repro.core.isa.hlo_census``   - our instruction census with while-loop
+    trip multipliers, HBM-traffic and collective wire-byte estimates (the
+    numbers §Roofline uses).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --cell train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every runnable cell x mesh
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, cells_for, get_config
+from repro.core.isa import hlo_census
+from repro.launch.mesh import (batch_axes, make_production_mesh,
+                               n_batch_shards)
+from repro.models.zoo import build_model, count_active_params, count_params
+from repro.sharding.plans import serve_shardings, train_shardings
+from repro.train import optim as optim_mod
+from repro.train.step import accum_steps_for, make_decode_step, \
+    make_prefill_step, make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mem_analysis_dict(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes",
+                 "serialized_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(ma, attr))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception:
+        return {}
+
+
+OPT_PLAN = dict(head_pad_multiple=16, scatter_cache_update=True,
+                cast_params_once=True, moe_impl="shard")
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS, save_hlo: bool = False,
+             opt: bool = False, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if opt:
+        cfg = cfg.replace(**OPT_PLAN)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    cell = next(c for c in cells_for(cfg) if c.name == cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    mesh_tag = ("pod2x16x16" if multi_pod else "pod16x16") \
+        + ("__opt" if opt else "")
+    t0 = time.time()
+
+    jax.set_mesh(mesh)  # context mesh: activation sharding constraints resolve
+    with mesh:
+        if cell.kind == "train":
+            optimizer = optim_mod.make_optimizer(cfg.optimizer)
+            psh, osh, bsh, shapes, log = train_shardings(
+                model, optimizer, mesh, cell)
+            accum = accum_steps_for(cfg, cell.global_batch,
+                                    n_batch_shards(mesh),
+                                    n_pods=mesh.shape.get("pod", 1))
+            step = make_train_step(model, optimizer, accum,
+                                   batch_axes(mesh))
+            opt_shapes = shapes["opt"]
+            lowered = jax.jit(
+                step, in_shardings=(psh, osh, bsh),
+                out_shardings=(psh, osh, None),
+                donate_argnums=(0, 1),
+            ).lower(shapes["params"], opt_shapes, shapes["batch"])
+        else:
+            psh, ish, shapes, log = serve_shardings(model, mesh, cell)
+            accum = 1
+            if cell.kind == "prefill":
+                step = make_prefill_step(model)
+                lowered = jax.jit(
+                    step, in_shardings=(psh, ish),
+                ).lower(shapes["params"], shapes["inputs"])
+            else:
+                step = make_decode_step(model)
+                inp = shapes["inputs"]
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(psh, ish["cache"], ish["tokens"],
+                                  ish["pos"]),
+                    donate_argnums=(1,),
+                ).lower(shapes["params"], inp["cache"], inp["tokens"],
+                        inp["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = _mem_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    text = compiled.as_text()
+    cens = hlo_census.census(text, n_devices=n_dev)
+    colls = hlo_census.collective_table(text, n_devices=n_dev)
+    # keep only the heaviest collectives itemized
+    colls = sorted(colls, key=lambda c: -c["wire_bytes"])[:40]
+
+    n_params = count_params(cfg)
+    n_active = count_active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = cell.global_batch  # one token per row
+        model_flops = 2.0 * n_active * tokens
+
+    result = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_tag,
+        "n_devices": n_dev, "kind": cell.kind,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "accum_steps": accum,
+        "params": n_params, "active_params": n_active,
+        "model_flops_global": model_flops,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "census": cens,
+        "top_collectives": colls,
+        "sharding_log": log[:40],
+        "hlo_bytes": len(text),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{cell_name}__{mesh_tag}.json"
+    out_path.write_text(json.dumps(result, indent=1))
+    if save_hlo:
+        (out_dir / f"{arch}__{cell_name}__{mesh_tag}.hlo.txt").write_text(text)
+    print(f"[dryrun] {arch} {cell_name} {mesh_tag}: "
+          f"compile={t_compile:.1f}s "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"census_flops={cens['flops']:.3e} "
+          f"coll={cens['collective_bytes_total']/2**30:.3f}GiB")
+    print(f"[dryrun] memory_analysis: {mem}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="apply the beyond-paper optimization plan")
+    args = ap.parse_args()
+
+    jobs = []
+    if args.all:
+        for arch, cfg in ARCHS.items():
+            for cell in cells_for(cfg):
+                jobs.append((arch, cell.name, False))
+                jobs.append((arch, cell.name, True))
+    else:
+        archs = [args.arch] if args.arch else list(ARCHS)
+        for arch in archs:
+            cfg = get_config(arch)
+            cells = ([args.cell] if args.cell
+                     else [c.name for c in cells_for(cfg)])
+            for cell in cells:
+                if args.both_meshes:
+                    jobs.append((arch, cell, False))
+                    jobs.append((arch, cell, True))
+                else:
+                    jobs.append((arch, cell, args.multi_pod))
+
+    failures = []
+    for arch, cell, mp in jobs:
+        tag = ("pod2x16x16" if mp else "pod16x16") + ("__opt" if args.opt else "")
+        out = RESULTS / f"{arch}__{cell}__{tag}.json"
+        if args.skip_existing and out.exists():
+            continue
+        try:
+            run_cell(arch, cell, mp, save_hlo=args.save_hlo, opt=args.opt)
+        except Exception as e:  # noqa
+            traceback.print_exc()
+            failures.append((arch, cell, tag, repr(e)[:200]))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", *f)
+        raise SystemExit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device state; the dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use.
+
+Mesh shapes: single pod = (16, 16) over ('data', 'model') = 256 v5e chips;
+multi-pod = (2, 16, 16) over ('pod', 'data', 'model') = 512 chips.  Batch
+shards over ('pod', 'data'); FSDP weight sharding over 'data'; tensor/expert/
+sequence parallelism over 'model'; 'pod' is pure DP (weights replicated
+across pods, gradients all-reduced over the cross-pod links, which is where
+gradient compression applies).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """A mesh over whatever devices exist (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    m = model_axis or 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_batch_shards(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

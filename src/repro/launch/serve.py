@@ -1,0 +1,48 @@
+"""Serving launcher: --arch <id>, engine over the production mesh (dry-run)
+or a reduced config executed locally.
+
+  python -m repro.launch.serve --arch deepseek-v2-236b --dry-run --cell decode_32k
+  python -m repro.launch.serve --arch gemma3-1b --host --requests 8
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default="decode_32k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--host", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count"
+                                     "=512").strip()
+        from repro.launch.dryrun import run_cell
+        run_cell(args.arch, args.cell, args.multi_pod)
+        return
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.models.zoo import build_model
+    from repro.serve.engine import ServingEngine
+
+    cfg = reduced(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(model, params, max_batch=4, max_len=64)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+                   max_new_tokens=8)
+    stats = eng.run_until_done()
+    print(f"served {stats.completed} requests, {stats.decoded_tokens} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Production training launcher: --arch <id> on the production mesh.
+
+On real hardware this runs under `jax.distributed.initialize()` across
+hosts; in this container pass --dry-run to lower+compile only (equivalent to
+repro.launch.dryrun for the train cell) or --host-mesh to actually execute a
+reduced config on the local device.
+
+  python -m repro.launch.train --arch yi-34b --dry-run
+  python -m repro.launch.train --arch gemma2-2b --host-mesh --steps 50
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--host-mesh", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " --xla_force_host_platform_device_count"
+                                     "=512").strip()
+        from repro.launch.dryrun import run_cell
+        run_cell(args.arch, args.cell, args.multi_pod)
+        return
+
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.zoo import build_model
+    from repro.train.loop import train
+
+    cfg = get_config(args.arch)
+    if args.host_mesh:
+        cfg = reduced(cfg)
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    model = build_model(cfg)
+    res = train(model, mesh, num_steps=args.steps, global_batch=8,
+                seq_len=64, ckpt_dir=args.ckpt_dir,
+                hooks=[lambda s, m: print(f"step {s} loss "
+                                          f"{float(m['loss']):.4f}")])
+    print(f"done: {res.steps_run} steps, final loss {res.final_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Encoder-decoder trunk (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over stub frame embeddings.
+Decoder: causal self-attention (cached) + cross-attention onto the encoder
+memory (cross K/V computed once at prefill and cached) + FFN.
+RoPE is used for self-attention positions (the speech frontend that would
+supply convolutional relative positions is a stub per the task spec).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import attention as attn_mod
+from repro.models.layers import basic
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": basic.init_rmsnorm(cfg.d_model),
+        "attn": attn_mod.init_attention(ks[0], cfg),
+        "ln2": basic.init_rmsnorm(cfg.d_model),
+        "ffn": basic.init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _enc_layer_specs(cfg):
+    return {"ln1": basic.rmsnorm_specs(),
+            "attn": attn_mod.attention_specs(cfg),
+            "ln2": basic.rmsnorm_specs(),
+            "ffn": basic.mlp_specs(gated=False)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": basic.init_rmsnorm(cfg.d_model),
+        "self_attn": attn_mod.init_attention(ks[0], cfg),
+        "ln_x": basic.init_rmsnorm(cfg.d_model),
+        "cross_attn": attn_mod.init_attention(ks[1], cfg),
+        "ln2": basic.init_rmsnorm(cfg.d_model),
+        "ffn": basic.init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_layer_specs(cfg):
+    return {"ln1": basic.rmsnorm_specs(),
+            "self_attn": attn_mod.attention_specs(cfg),
+            "ln_x": basic.rmsnorm_specs(),
+            "cross_attn": attn_mod.attention_specs(cfg),
+            "ln2": basic.rmsnorm_specs(),
+            "ffn": basic.mlp_specs(gated=False)}
+
+
+def init_encdec(key, cfg):
+    e = cfg.encdec
+    ks = jax.random.split(key, 4)
+    enc_keys = jnp.stack(jax.random.split(ks[0], e.n_enc_layers))
+    dec_keys = jnp.stack(jax.random.split(ks[1], e.n_dec_layers))
+    return {
+        "embed": basic.init_embed(ks[2], cfg.vocab_size, cfg.d_model,
+                                  cfg.tie_embeddings),
+        "frame_proj": jax.random.normal(
+            ks[3], (cfg.d_model, cfg.d_model), jnp.float32) * cfg.d_model ** -0.5,
+        "enc_layers": jax.vmap(functools.partial(_init_enc_layer, cfg=cfg))(enc_keys),
+        "enc_ln_f": basic.init_rmsnorm(cfg.d_model),
+        "dec_layers": jax.vmap(functools.partial(_init_dec_layer, cfg=cfg))(dec_keys),
+        "ln_f": basic.init_rmsnorm(cfg.d_model),
+    }
+
+
+def encdec_specs(cfg):
+    lift = lambda per: jax.tree.map(lambda sp: P(None, *sp), per,
+                                    is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": basic.embed_specs(cfg.tie_embeddings),
+        "frame_proj": P("data", "model"),
+        "enc_layers": lift(_enc_layer_specs(cfg)),
+        "enc_ln_f": basic.rmsnorm_specs(),
+        "dec_layers": lift(_dec_layer_specs(cfg)),
+        "ln_f": basic.rmsnorm_specs(),
+    }
+
+
+def init_encdec_cache(cfg, batch, max_len, enc_len):
+    e, kh, hd = cfg.encdec, cfg.n_kv_heads, cfg.head_dim
+    L = e.n_dec_layers
+    return {
+        "k": jnp.zeros((L, batch, max_len, kh, hd), jnp.bfloat16),
+        "v": jnp.zeros((L, batch, max_len, kh, hd), jnp.bfloat16),
+        "xk": jnp.zeros((L, batch, enc_len, kh, hd), jnp.bfloat16),
+        "xv": jnp.zeros((L, batch, enc_len, kh, hd), jnp.bfloat16),
+    }
+
+
+def encdec_cache_specs(batch_axes=("data",), seq_axis="model"):
+    spec = P(None, batch_axes, seq_axis, None, None)
+    return {"k": spec, "v": spec, "xk": spec, "xv": spec}
+
+
+def encode(params, cfg, frames, remat=True):
+    """frames [B,S_enc,D] (stub embeddings) -> memory [B,S_enc,D]."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.einsum("bsd,de->bse", frames.astype(cdt),
+                   params["frame_proj"].astype(cdt))
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        h, _ = attn_mod.attention(lp["attn"],
+                                  basic.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                                  cfg=cfg, positions=pos, is_global=True,
+                                  causal=False)
+        x = x + h
+        x = x + basic.mlp(lp["ffn"], basic.rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                          "relu")
+        return x, 0.0
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return basic.rmsnorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def encdec_apply(params, cfg, *, tokens, frames=None, memory=None, mode="train",
+                 cache=None, write_pos=None, max_len=None, remat=True):
+    """Returns (logits, aux, new_cache).
+
+    train:   frames [B,S_enc,D], tokens [B,S_dec]  -> logits over tokens
+    prefill: same; returns cache (self KV padded to max_len, cross KV, memory
+             is re-derivable so not stored)
+    decode:  tokens [B,1], cache, write_pos [B]
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    aux = {"moe_load_balance": jnp.zeros((), jnp.float32),
+           "moe_router_z": jnp.zeros((), jnp.float32)}
+    if mode != "decode":
+        memory = encode(params, cfg, frames, remat=remat)
+    mem_pos = None
+    if memory is not None:
+        mem_pos = jnp.broadcast_to(
+            jnp.arange(memory.shape[1], dtype=jnp.int32)[None],
+            (B, memory.shape[1]))
+
+    x = basic.embed_tokens(params["embed"], tokens, cdt)
+    if mode == "decode":
+        positions = write_pos[:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    max_len = max_len or S
+
+    def body(x, xs):
+        if mode == "decode":
+            lp, cl = xs
+        else:
+            lp, cl = xs, None
+        h, self_kv = attn_mod.attention(
+            lp["self_attn"], basic.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+            cfg=cfg, positions=positions, is_global=True,
+            cache={"k": cl["k"], "v": cl["v"]} if mode == "decode" else None,
+            write_pos=write_pos)
+        x = x + h
+        if mode == "decode":
+            xkv = {"k": cl["xk"], "v": cl["xv"]}
+            h, _ = attn_mod.attention(
+                lp["cross_attn"], basic.rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                cfg=cfg, positions=positions, is_global=True,
+                memory=jnp.zeros((B, xkv["k"].shape[1], cfg.d_model), cdt),
+                mem_positions=jnp.broadcast_to(
+                    jnp.arange(xkv["k"].shape[1], dtype=jnp.int32)[None],
+                    (B, xkv["k"].shape[1])),
+                cache=xkv)
+            cross_kv = xkv
+        else:
+            h, cross_kv = attn_mod.attention(
+                lp["cross_attn"], basic.rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                cfg=cfg, positions=positions, is_global=True,
+                memory=memory, mem_positions=mem_pos)
+        x = x + h
+        x = x + basic.mlp(lp["ffn"], basic.rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                          "relu")
+        if mode == "train":
+            return x, 0.0
+        def pad(c):
+            if c.shape[1] == max_len:
+                return c
+            pads = [(0, 0)] * c.ndim
+            pads[1] = (0, max_len - c.shape[1])
+            return jnp.pad(c, pads)
+        if mode == "prefill":
+            ys = {"k": pad(self_kv["k"]).astype(jnp.bfloat16),
+                  "v": pad(self_kv["v"]).astype(jnp.bfloat16),
+                  "xk": cross_kv["k"].astype(jnp.bfloat16),
+                  "xv": cross_kv["v"].astype(jnp.bfloat16)}
+        else:
+            ys = {"k": self_kv["k"], "v": self_kv["v"],
+                  "xk": cross_kv["k"], "xv": cross_kv["v"]}
+        return x, ys
+
+    xs = ((params["dec_layers"], cache) if mode == "decode"
+          else params["dec_layers"])
+    if mode == "train" and remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body, x, xs)
+    x = basic.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if mode == "prefill":
+        x = x[:, -1:, :]   # only the last position's logits are used
+    logits = basic.unembed(params["embed"], x, cdt, cfg.logit_softcap,
+                           vocab=cfg.vocab_size)
+    new_cache = None if mode == "train" else ys
+    return logits, aux, new_cache

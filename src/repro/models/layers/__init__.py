@@ -1,0 +1,2 @@
+from repro.models.layers import (attention, basic, mamba, mla, moe,  # noqa
+                                 rwkv)

@@ -1,0 +1,185 @@
+"""Norms, activations, rotary embeddings, token embeddings, MLPs.
+
+Every layer exposes ``init_*`` (params), ``*_specs`` (PartitionSpec tree that
+mirrors the params) and an apply function.  Specs use the logical mesh axis
+names ``'data'`` (FSDP shard axis) and ``'model'`` (tensor-parallel axis);
+the launcher maps them onto the production mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import ctx
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm_specs():
+    return {"scale": P(None)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_specs():
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def groupnorm_heads(p, x, n_heads, eps=1e-5):
+    """Per-head group norm for RWKV wkv output. x: [..., H*hd]."""
+    dt = x.dtype
+    shp = x.shape
+    x = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = ((x - mu) * jax.lax.rsqrt(var + eps)).reshape(shp)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (llama-style split-half)
+
+
+def rope_tables(positions, dim, theta):
+    """positions [..., S] -> (sin, cos) [..., S, dim/2] in f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x [B,S,H,D]; sin/cos [B,S,D/2] (or broadcastable)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+
+
+def init_embed(key, vocab, d, tie, scale_by_dim=False):
+    vpad = ((vocab + 127) // 128) * 128   # shardable vocab (pad masked)
+    p = {"table": jax.random.normal(key, (vpad, d), jnp.float32) * 0.02}
+    if not tie:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = jax.random.normal(k2, (d, vpad), jnp.float32) * 0.02
+    return p
+
+
+def embed_specs(tie):
+    # vocab over 'model'; embed dim replicated (sharding d over 'data' makes
+    # the token gather unpartitionable: batch and d would fight for 'data').
+    s = {"table": P("model", None)}
+    if not tie:
+        s["unembed"] = P(None, "model")
+    return s
+
+
+def embed_tokens(p, tokens, cdt, scale_by_dim=False):
+    tab = p["table"].astype(cdt)
+    x = jnp.take(tab, tokens, axis=0)
+    x = ctx.constrain(x, "batch", None, None)
+    if scale_by_dim:
+        x = x * jnp.asarray(tab.shape[-1] ** 0.5, cdt)
+    return x
+
+
+def unembed(p, x, cdt, logit_cap=None, vocab=None):
+    if "unembed" in p:
+        w = p["unembed"].astype(cdt)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    else:
+        w = p["table"].astype(cdt)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    logits = ctx.constrain(logits, "batch", None, "model")
+    logits = logits.astype(jnp.float32)
+    if logit_cap:
+        logits = softcap(logits, logit_cap)
+    vpad = logits.shape[-1]
+    if vocab is not None and vocab != vpad:
+        # vocab-padding rows never win: mask to -1e9 (softmax/argmax exact)
+        col = jax.lax.iota(jnp.int32, vpad)
+        logits = jnp.where(col[None, None, :] < vocab, logits, -1e9)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, d, f, gated=True):
+    k = jax.random.split(key, 3)
+    lim_in, lim_out = d ** -0.5, f ** -0.5
+    if gated:
+        return {
+            "w_gate": jax.random.uniform(k[0], (d, f), jnp.float32, -lim_in, lim_in),
+            "w_up": jax.random.uniform(k[1], (d, f), jnp.float32, -lim_in, lim_in),
+            "w_down": jax.random.uniform(k[2], (f, d), jnp.float32, -lim_out, lim_out),
+        }
+    return {
+        "w_in": jax.random.uniform(k[0], (d, f), jnp.float32, -lim_in, lim_in),
+        "w_out": jax.random.uniform(k[1], (f, d), jnp.float32, -lim_out, lim_out),
+    }
+
+
+def mlp_specs(gated=True):
+    if gated:
+        return {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+                "w_down": P("model", "data")}
+    return {"w_in": P("data", "model"), "w_out": P("model", "data")}
+
+
+def mlp(p, x, act="silu"):
+    cdt = x.dtype
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cdt))
+        h = ctx.constrain(act_fn(act)(g) * u, "batch", None, "model")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cdt))
+    else:
+        h = act_fn(act)(jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cdt)))
+        h = ctx.constrain(h, "batch", None, "model")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cdt))
+    return ctx.constrain(out, "batch", None, None)

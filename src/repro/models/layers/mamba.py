@@ -1,0 +1,141 @@
+"""Selective-SSM (Mamba) mixer used as hymba's parallel SSM heads.
+
+hymba runs attention heads and SSM heads IN PARALLEL inside every layer: both
+paths read the same normed input; their pre-projection outputs are each
+RMS-normed and mean-fused before the shared output projection.  This module
+implements the SSM path; the fusion lives in the trunk.
+
+The recurrence h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t, y_t = C_t.h_t + D x_t
+is a lax.scan over the sequence (the jnp reference path used by the dry-run);
+`repro.kernels.ssm_scan` is the blocked Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.basic import act_fn
+
+
+def init_mamba(key, cfg):
+    d, s = cfg.d_model, cfg.ssm
+    di = d                       # hymba: expand=1, d_inner == d_model
+    k = jax.random.split(key, 6)
+    lim = d ** -0.5
+    u = lambda kk, shape, l: jax.random.uniform(kk, shape, jnp.float32, -l, l)
+    return {
+        "w_in": u(k[0], (d, 2 * di), lim),                    # x and gate z
+        "conv": u(k[1], (s.conv_width, di), s.conv_width ** -0.5),
+        "w_bcdt": u(k[2], (di, 2 * s.state_dim + s.dt_rank), di ** -0.5),
+        "w_dt": u(k[3], (s.dt_rank, di), s.dt_rank ** -0.5),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, s.state_dim + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+    }
+
+
+def mamba_specs(cfg):
+    return {
+        "w_in": P("data", "model"),
+        "conv": P(None, "model"),
+        "w_bcdt": P("model", None),
+        "w_dt": P(None, "model"),
+        "dt_bias": P(None),
+        "a_log": P("model", None),
+        "d_skip": P(None),
+    }
+
+
+def _ssm_scan_ref(xc, dt, B, C, A, h0, chunk=256):
+    """xc,dt [Bt,S,di]; B,C [Bt,S,N]; A [di,N]; h0 [Bt,di,N] f32.
+    Returns (y [Bt,S,di], hT).
+
+    Two-level scan with remat on the inner chunk (sqrt-remat): only the
+    chunk-boundary states are saved for the backward pass, bounding the
+    recurrence's residual memory to S/chunk boundary states instead of S
+    per-step ones.
+    """
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[..., None] * A)                      # [Bt,di,N]
+        h = dA * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    def run(h, xs):
+        return jax.lax.scan(step, h, xs)
+
+    S = xc.shape[1]
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    if S <= chunk or S % chunk != 0:
+        hT, ys = run(h0, xs)
+    else:
+        n = S // chunk
+        xs_c = jax.tree.map(lambda t: t.reshape((n, chunk) + t.shape[1:]), xs)
+        run_ck = jax.checkpoint(
+            run, policy=jax.checkpoint_policies.nothing_saveable)
+        hT, ys = jax.lax.scan(run_ck, h0, xs_c)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def mamba_mixer(p, x, cfg, state=None):
+    """x [Bt,S,D] -> (y_pre [Bt,S,di], new_state).
+
+    state (decode): {'conv': [Bt,W-1,di], 'h': [Bt,di,N]} or None (train).
+    y_pre is the pre-output-projection SSM path (gated), to be fused with the
+    attention path by the trunk.
+    """
+    s = cfg.ssm
+    cdt = x.dtype
+    Bt, S, D = x.shape
+    di = D
+    xz = jnp.einsum("bsd,dz->bsz", x, p["w_in"].astype(cdt))
+    xr, z = xz[..., :di], xz[..., di:]
+
+    # depthwise causal conv (width W): pad with state buffer when decoding
+    W = s.conv_width
+    if state is not None:
+        buf = state["conv"].astype(cdt)                        # [Bt,W-1,di]
+        xin = jnp.concatenate([buf, xr], axis=1)
+        new_conv = xin[:, -(W - 1):, :]
+    else:
+        xin = jnp.pad(xr, ((0, 0), (W - 1, 0), (0, 0)))
+        new_conv = xin[:, -(W - 1):, :]
+    conv_w = p["conv"].astype(cdt)
+    xc = sum(xin[:, i:i + S, :] * conv_w[i] for i in range(W))
+    xc = act_fn("silu")(xc)
+
+    bcdt = jnp.einsum("bsd,dz->bsz", xc, p["w_bcdt"].astype(cdt))
+    Bm = bcdt[..., :s.state_dim]
+    Cm = bcdt[..., s.state_dim:2 * s.state_dim]
+    dt_low = bcdt[..., 2 * s.state_dim:]
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_low,
+                                    p["w_dt"].astype(cdt)).astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])                                   # [di,N]
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((Bt, di, s.state_dim), jnp.float32))
+    y, hT = _ssm_scan_ref(xc, dt, Bm, Cm, A, h0)
+    y = (y.astype(cdt) + xc * p["d_skip"].astype(cdt)) * act_fn("silu")(z)
+    new_state = {"conv": new_conv.astype(jnp.bfloat16), "h": hT}
+    return y, new_state
+
+
+def init_mamba_state(cfg, batch, n_layers):
+    s = cfg.ssm
+    di = cfg.d_model
+    return {
+        "conv": jnp.zeros((n_layers, batch, s.conv_width - 1, di), jnp.bfloat16),
+        "h": jnp.zeros((n_layers, batch, di, s.state_dim), jnp.float32),
+    }
+
+
+def mamba_state_specs(batch_axes=("data",)):
+    return {"conv": P(None, batch_axes, None, "model"),
+            "h": P(None, batch_axes, "model", None)}

@@ -1,0 +1,149 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Train/prefill use the decompressed (non-absorbed) formulation; decode uses the
+ABSORBED formulation so the per-token state is only the (kv_lora + rope)-wide
+latent, which is the whole point of MLA: the cache is
+[B, S, kv_lora + qk_rope] regardless of the 128 heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.attention import _mask, NEG_INF
+from repro.models.layers.basic import apply_rope, rmsnorm, rope_tables
+from repro.sharding import ctx
+
+
+def init_mla(key, cfg):
+    m, d, h = cfg.mla, cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    k = jax.random.split(key, 7)
+    lim = d ** -0.5
+    u = lambda kk, shape, l: jax.random.uniform(kk, shape, jnp.float32, -l, l)
+    return {
+        "w_dq": u(k[0], (d, m.q_lora_rank), lim),
+        "q_norm": {"scale": jnp.zeros((m.q_lora_rank,), jnp.float32)},
+        "w_uq": u(k[1], (m.q_lora_rank, h, qk_dim), m.q_lora_rank ** -0.5),
+        "w_dkv": u(k[2], (d, m.kv_lora_rank + m.qk_rope_dim), lim),
+        "kv_norm": {"scale": jnp.zeros((m.kv_lora_rank,), jnp.float32)},
+        "w_uk": u(k[3], (m.kv_lora_rank, h, m.qk_nope_dim), m.kv_lora_rank ** -0.5),
+        "w_uv": u(k[4], (m.kv_lora_rank, h, m.v_head_dim), m.kv_lora_rank ** -0.5),
+        "wo": u(k[5], (h, m.v_head_dim, d), (h * m.v_head_dim) ** -0.5),
+    }
+
+
+def mla_specs(cfg):
+    return {
+        "w_dq": P("data", None),
+        "q_norm": {"scale": P(None)},
+        "w_uq": P(None, "model", None),
+        "w_dkv": P("data", None),
+        "kv_norm": {"scale": P(None)},
+        "w_uk": P(None, "model", None),
+        "w_uv": P(None, "model", None),
+        "wo": P("model", None, "data"),
+    }
+
+
+def _latents(p, x, cfg, positions):
+    """x -> (q_nope [B,S,H,n], q_rope [B,S,H,r], c_kv [B,S,l], k_rope [B,S,r])."""
+    m = cfg.mla
+    cdt = x.dtype
+    q_low = rmsnorm(p["q_norm"], jnp.einsum("bsd,dl->bsl", x, p["w_dq"].astype(cdt)),
+                    cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", q_low, p["w_uq"].astype(cdt))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    dkv = jnp.einsum("bsd,dl->bsl", x, p["w_dkv"].astype(cdt))
+    c_kv = rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:]
+    sin, cos = rope_tables(positions, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, *, cfg, positions, cache=None, write_pos=None,
+                  chunk=None):
+    """Returns (out [B,S,D], new_cache {'ckv','krope'})."""
+    m = cfg.mla
+    cdt = x.dtype
+    B, Sq, _ = x.shape
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope, q_rope, ckv_new, krope_new = _latents(p, x, cfg, positions)
+
+    if cache is None:  # ------------------------- train / prefill (decompressed)
+        k_nope = ctx.constrain(
+            jnp.einsum("bsl,lhn->bshn", ckv_new, p["w_uk"].astype(cdt)),
+            "batch", None, "model", None)
+        v = ctx.constrain(
+            jnp.einsum("bsl,lhv->bshv", ckv_new, p["w_uv"].astype(cdt)),
+            "batch", None, "model", None)
+        q_nope = ctx.constrain(q_nope, "batch", None, "model", None)
+        q_rope = ctx.constrain(q_rope, "batch", None, "model", None)
+        chunk = chunk or cfg.attn_chunk
+        n = max(Sq // chunk, 1) if Sq % (chunk or 1) == 0 else 1
+
+        def chunk_body(qnc, qrc, pc, kn, kr, vv):
+            s = (jnp.einsum("bqhn,bkhn->bhqk", qnc, kn)
+                 + jnp.einsum("bqhr,bkr->bhqk", qrc, kr)
+                 ).astype(jnp.float32) * scale
+            msk = _mask(pc, positions, causal=True, window=None, n_sink=0)
+            s = jnp.where(msk[:, None, :, :], s, NEG_INF)
+            pr = jax.nn.softmax(s, axis=-1).astype(cdt)
+            return jnp.einsum("bhqk,bkhv->bqhv", pr, vv)
+
+        chunk_fn = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+        qn = jnp.moveaxis(q_nope.reshape(B, n, Sq // n, *q_nope.shape[2:]), 1, 0)
+        qr = jnp.moveaxis(q_rope.reshape(B, n, Sq // n, *q_rope.shape[2:]), 1, 0)
+        ps = jnp.moveaxis(positions.reshape(B, n, Sq // n), 1, 0)
+
+        def body(_, inp):
+            qnc, qrc, pc = inp
+            return (), chunk_fn(qnc, qrc, pc, k_nope, krope_new, v)
+
+        _, outs = jax.lax.scan(body, (), (qn, qr, ps))
+        ctx_out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, cfg.n_heads,
+                                                   m.v_head_dim)
+        new_cache = {"ckv": ckv_new, "krope": krope_new}
+    else:  # ------------------------------------------------ decode (absorbed)
+        def upd(c, nw, wp):
+            return jax.lax.dynamic_update_slice(c, nw.astype(c.dtype), (wp, 0))
+        ckv = ctx.constrain(jax.vmap(upd)(cache["ckv"], ckv_new, write_pos),
+                            "batch", "seq", None)
+        krope = ctx.constrain(
+            jax.vmap(upd)(cache["krope"], krope_new, write_pos),
+            "batch", "seq", None)
+        new_cache = {"ckv": ckv, "krope": krope}
+        ckv_c, krope_c = ckv.astype(cdt), krope.astype(cdt)
+        Smax = ckv.shape[1]
+        slot = jnp.arange(Smax, dtype=jnp.int32)[None, :]
+        kpos = jnp.where(slot <= (write_pos[:, None] + Sq - 1), slot, -1)
+        # absorb W_UK into the query: q_eff [B,S,H,l]
+        q_eff = jnp.einsum("bshn,lhn->bshl", q_nope, p["w_uk"].astype(cdt))
+        s = (jnp.einsum("bshl,bkl->bshk", q_eff, ckv_c)
+             + jnp.einsum("bshr,bkr->bshk", q_rope, krope_c)
+             ).astype(jnp.float32) * scale
+        msk = _mask(positions, kpos, causal=True, window=None, n_sink=0)
+        s = jnp.where(msk[:, :, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(cdt)
+        lat = jnp.einsum("bshk,bkl->bshl", pr, ckv_c)      # [B,S,H,l]
+        ctx_out = jnp.einsum("bshl,lhv->bshv", lat, p["w_uv"].astype(cdt))
+
+    out = jnp.einsum("bshv,hvd->bsd", ctx_out, p["wo"].astype(cdt))
+    return ctx.constrain(out, "batch", None, None), new_cache
+
+
+def init_mla_cache(cfg, batch, max_len, n_layers, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((n_layers, batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_cache_specs(batch_axes=("data",), seq_axis="model"):
+    return {"ckv": P(None, batch_axes, seq_axis, None),
+            "krope": P(None, batch_axes, seq_axis, None)}

@@ -1,0 +1,189 @@
+"""RWKV6 (Finch) time-mix and channel-mix with data-dependent decay.
+
+Per head (dim N): state S in R^{N x N};
+  y_t = r_t . (S_t + diag(u) k_t v_t^T)          (read)
+  S_{t+1} = diag(w_t) S_t + k_t v_t^T            (update; w_t data-dependent)
+Token shift uses the v6 "ddlerp" (LoRA-modulated lerp with x_{t-1}).
+
+The sequence recurrence is a lax.scan (jnp reference / dry-run path);
+`repro.kernels.wkv6` is the chunked Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.basic import groupnorm_heads
+
+_TM_TARGETS = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_tmix(key, cfg):
+    d, r = cfg.d_model, cfg.rwkv
+    k = jax.random.split(key, 12)
+    lim = d ** -0.5
+    u = lambda kk, shape, l: jax.random.uniform(kk, shape, jnp.float32, -l, l)
+    H = d // r.head_dim
+    return {
+        "mu": jnp.full((len(_TM_TARGETS), d), 0.5, jnp.float32),
+        "mix_a": u(k[0], (d, len(_TM_TARGETS) * r.mix_lora), lim),
+        "mix_b": u(k[1], (len(_TM_TARGETS), r.mix_lora, d), r.mix_lora ** -0.5),
+        "wr": u(k[2], (d, d), lim),
+        "wk": u(k[3], (d, d), lim),
+        "wv": u(k[4], (d, d), lim),
+        "wg": u(k[5], (d, d), lim),
+        "wo": u(k[6], (d, d), lim),
+        "w_base": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": u(k[7], (d, r.decay_lora), lim),
+        "w_lora_b": u(k[8], (r.decay_lora, d), r.decay_lora ** -0.5),
+        "u_bonus": u(k[9], (H, r.head_dim), 1.0),
+        "gn": {"scale": jnp.ones((d,), jnp.float32),
+               "bias": jnp.zeros((d,), jnp.float32)},
+    }
+
+
+def rwkv_tmix_specs(cfg):
+    return {
+        "mu": P(None, None), "mix_a": P("data", None), "mix_b": P(None, None, None),
+        "wr": P("data", "model"), "wk": P("data", "model"),
+        "wv": P("data", "model"), "wg": P("data", "model"),
+        "wo": P("model", "data"),
+        "w_base": P(None), "w_lora_a": P("data", None), "w_lora_b": P(None, None),
+        "u_bonus": P("model", None),
+        "gn": {"scale": P(None), "bias": P(None)},
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """v6 data-dependent token shift -> dict of mixed inputs per target."""
+    cdt = x.dtype
+    dx = x_prev - x
+    # low-rank modulation trunk (v6 "ddlerp": shared half-mix input)
+    a = jnp.tanh(jnp.einsum("bsd,dz->bsz", x + dx * 0.5,
+                            p["mix_a"].astype(cdt)))
+    a = a.reshape(a.shape[:-1] + (len(_TM_TARGETS), -1))
+    mods = jnp.einsum("bstr,trd->tbsd", a, p["mix_b"].astype(cdt))
+    out = {}
+    for i, t in enumerate(_TM_TARGETS):
+        mu = p["mu"][i].astype(cdt) + mods[i]
+        out[t] = x + dx * mu
+    return out
+
+
+def _wkv_scan_ref(r, k, v, w, u, s0, chunk=256):
+    """r,k,v [B,S,H,N]; w [B,S,H,N] decay in (0,1); u [H,N]; s0 [B,H,N,N] f32.
+    Returns y [B,S,H,N], sT.  Two-level sqrt-remat scan (see mamba)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                         # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]       # [B,H,N,N]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    def run(s, xs):
+        return jax.lax.scan(step, s, xs)
+
+    S = r.shape[1]
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    if S <= chunk or S % chunk != 0:
+        sT, ys = run(s0, xs)
+    else:
+        n = S // chunk
+        xs_c = jax.tree.map(lambda t: t.reshape((n, chunk) + t.shape[1:]), xs)
+        run_ck = jax.checkpoint(
+            run, policy=jax.checkpoint_policies.nothing_saveable)
+        sT, ys = jax.lax.scan(run_ck, s0, xs_c)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    return jnp.moveaxis(ys, 0, 1), sT
+
+
+def rwkv_time_mix(p, x, cfg, state=None, need_state=True):
+    """x [B,S,D] -> (out [B,S,D], new_state {'shift':[B,D], 'wkv':[B,H,N,N]})."""
+    r_cfg = cfg.rwkv
+    cdt = x.dtype
+    B, S, D = x.shape
+    H, N = D // r_cfg.head_dim, r_cfg.head_dim
+    x_prev = (jnp.concatenate([state["shift"][:, None, :].astype(cdt),
+                               x[:, :-1, :]], axis=1)
+              if state is not None else
+              jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :])
+    mixed = _ddlerp(p, x, x_prev)
+    proj = lambda name, t: jnp.einsum("bsd,dz->bsz", mixed[t],
+                                      p[name].astype(cdt))
+    r = proj("wr", "r").reshape(B, S, H, N)
+    k = proj("wk", "k").reshape(B, S, H, N)
+    v = proj("wv", "v").reshape(B, S, H, N)
+    g = jax.nn.silu(proj("wg", "g"))
+    w_log = (p["w_base"].astype(cdt)
+             + jnp.einsum("bsd,dz,ze->bse", mixed["w"],
+                          p["w_lora_a"].astype(cdt), p["w_lora_b"].astype(cdt)))
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(B, S, H, N)
+    s0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+    if cfg.use_pallas and state is None and not need_state:
+        # TPU hot path: VMEM-resident WKV state (kernels/wkv6).  Training
+        # never reads the final state, so the kernel (which emits only y)
+        # applies; prefill needs s_T and stays on the reference scan.
+        from repro.kernels import ops as kops
+        y = kops.wkv6(r, k, v, w, p["u_bonus"].astype(r.dtype))
+        sT = s0
+    else:
+        y, sT = _wkv_scan_ref(r, k, v, w, p["u_bonus"].astype(jnp.float32),
+                              s0)
+    y = groupnorm_heads(p["gn"], y.astype(cdt).reshape(B, S, D), H) * g
+    out = jnp.einsum("bsd,dz->bsz", y, p["wo"].astype(cdt))
+    new_state = {"shift": x[:, -1, :].astype(jnp.bfloat16), "wkv": sT}
+    return out, new_state
+
+
+def init_rwkv_cmix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    k = jax.random.split(key, 3)
+    lim = d ** -0.5
+    u = lambda kk, shape, l: jax.random.uniform(kk, shape, jnp.float32, -l, l)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": u(k[0], (d, f), lim),
+        "wv": u(k[1], (f, d), f ** -0.5),
+        "wr": u(k[2], (d, d), lim),
+    }
+
+
+def rwkv_cmix_specs(cfg):
+    return {"mu_k": P(None), "mu_r": P(None),
+            "wk": P("data", "model"), "wv": P("model", "data"),
+            "wr": P("data", "model")}
+
+
+def rwkv_channel_mix(p, x, cfg, state=None):
+    cdt = x.dtype
+    x_prev = (jnp.concatenate([state[:, None, :].astype(cdt), x[:, :-1, :]],
+                              axis=1)
+              if state is not None else
+              jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :])
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"].astype(cdt)
+    xr = x + dx * p["mu_r"].astype(cdt)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk,
+                                          p["wk"].astype(cdt))))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(cdt))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,dz->bsz", xr, p["wr"].astype(cdt))) * kv
+    return out, x[:, -1, :].astype(jnp.bfloat16)
+
+
+def init_rwkv_state(cfg, batch, n_layers):
+    d = cfg.d_model
+    H, N = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    return {
+        "tm_shift": jnp.zeros((n_layers, batch, d), jnp.bfloat16),
+        "cm_shift": jnp.zeros((n_layers, batch, d), jnp.bfloat16),
+        "wkv": jnp.zeros((n_layers, batch, H, N, N), jnp.float32),
+    }
+
+
+def rwkv_state_specs(batch_axes=("data",)):
+    return {"tm_shift": P(None, batch_axes, "model"),
+            "cm_shift": P(None, batch_axes, "model"),
+            "wkv": P(None, batch_axes, "model", None, None)}

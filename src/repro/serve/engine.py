@@ -1,0 +1,129 @@
+"""Batched serving engine: continuous batching over a fixed decode batch.
+
+Requests queue in; the engine packs up to `max_batch` concurrent sequences
+into one KV cache, prefills new arrivals into free slots (per-slot write
+positions — the model's decode path already takes per-row `pos`), decodes
+one token per step for every active slot, and retires sequences on EOS or
+length budget.  This is the vLLM-style loop reduced to its scheduling core,
+with slot-granular (not paged) KV memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.zoo import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    decoded_tokens: int = 0
+    completed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._rid = itertools.count()
+        # slot state
+        self.cache = model.init_cache(max_batch, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)
+        self.slot_tok = np.zeros(max_batch, np.int32)
+        self._decode = jax.jit(model.decode)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, eos_id,
+                                  submitted_s=time.time()))
+        return rid
+
+    # -- internals ------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Prefill a single request and splice its KV into the batch cache."""
+        S = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+        logits, cache1 = self.model.prefill(self.params, batch,
+                                            max_len=self.max_len)
+        def splice(big, small):
+            return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
+        self.cache = jax.tree.map(splice, self.cache, cache1)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = S
+        self.slot_tok[slot] = int(jnp.argmax(logits[0]))
+        req.tokens.append(int(self.slot_tok[slot]))
+        self.stats.prefills += 1
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.finished_s = time.time()
+        self.done[req.rid] = req
+        self.slot_req[slot] = None
+        self.stats.completed += 1
+
+    def step(self) -> int:
+        """One engine iteration: admit, decode, retire.  Returns #active."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._prefill_into_slot(slot, self.queue.popleft())
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.slot_tok[:, None])
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.stats.steps += 1
+        for i in active:
+            req = self.slot_req[i]
+            req.tokens.append(int(nxt[i]))
+            self.stats.decoded_tokens += 1
+            self.slot_tok[i] = nxt[i]
+            self.slot_pos[i] += 1
+            hit_eos = req.eos_id is not None and nxt[i] == req.eos_id
+            out_of_budget = len(req.tokens) >= req.max_new_tokens
+            out_of_cache = self.slot_pos[i] >= self.max_len - 1
+            if hit_eos or out_of_budget or out_of_cache:
+                self._retire(i)
+        return len(active)
+
+    def run_until_done(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            active = self.step()
+            if active == 0 and not self.queue:
+                break
+        return self.stats

@@ -1,0 +1,2 @@
+from repro.sharding.plans import (named_tree, sanitize_specs,  # noqa
+                                  train_shardings, serve_shardings)

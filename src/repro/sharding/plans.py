@@ -1,0 +1,93 @@
+"""Turn logical PartitionSpec trees into concrete NamedShardings for a mesh.
+
+Specs are authored with logical axis names 'data' (FSDP) and 'model'
+(TP/EP/SP).  ``sanitize_specs`` drops a sharded axis from a spec when the
+corresponding dim is not divisible by the axis size (GSPMD supports padding,
+but uneven shardings of tiny dims - e.g. 4 query heads over 16-way model
+parallelism - waste >50% of the axis; replication is strictly better there).
+The sanitation decisions are returned so EXPERIMENTS.md can report them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, n_batch_shards
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_specs(specs, shapes, mesh: Mesh, log: List[str] | None = None):
+    """Replace non-divisible sharded dims with replication (see module doc)."""
+    def fix(spec, shp):
+        if spec is None:
+            return P()
+        dims = tuple(shp.shape)
+        new_axes = []
+        for i, axes in enumerate(tuple(spec) + (None,) * (len(dims) - len(tuple(spec)))):
+            if axes is None:
+                new_axes.append(None)
+                continue
+            size = _axis_size(mesh, axes)
+            if i < len(dims) and dims[i] % size == 0:
+                new_axes.append(axes)
+            else:
+                if log is not None:
+                    log.append(f"replicated dim {i} ({dims[i]}) of {dims} "
+                               f"instead of sharding over {axes} ({size})")
+                new_axes.append(None)
+        while new_axes and new_axes[-1] is None:
+            new_axes.pop()
+        return P(*new_axes)
+
+    return jax.tree.map(fix, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_tree(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_shardings(model, optimizer, mesh: Mesh, cell):
+    """Returns (param_sh, opt_sh, batch_sh, shapes, log)."""
+    log: List[str] = []
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model.init, key)
+    pspecs = sanitize_specs(model.param_specs(), param_shapes, mesh, log)
+    opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+    ospecs = optimizer.state_specs(pspecs, param_shapes)
+    ospecs = sanitize_specs(ospecs, opt_shapes, mesh, log)
+    baxes = batch_axes(mesh)
+    bspecs = model.input_shardings(cell, batch_axes=baxes)
+    batch_shapes = model.input_specs(cell)
+    bspecs = sanitize_specs(bspecs, batch_shapes, mesh, log)
+    return (named_tree(mesh, pspecs), named_tree(mesh, ospecs),
+            named_tree(mesh, bspecs),
+            {"params": param_shapes, "opt": opt_shapes,
+             "batch": batch_shapes}, log)
+
+
+def serve_shardings(model, mesh: Mesh, cell):
+    """Returns (param_sh, input_sh, shapes, log) for prefill/decode cells."""
+    log: List[str] = []
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model.init, key)
+    pspecs = sanitize_specs(model.param_specs(), param_shapes, mesh, log)
+    baxes = batch_axes(mesh)
+    ispecs = model.input_shardings(cell, batch_axes=baxes)
+    input_shapes = model.input_specs(cell)
+    ispecs = sanitize_specs(ispecs, input_shapes, mesh, log)
+    return (named_tree(mesh, pspecs), named_tree(mesh, ispecs),
+            {"params": param_shapes, "inputs": input_shapes}, log)

@@ -1,0 +1,165 @@
+"""Optimizers in pure JAX: AdamW and (factored) Adafactor, with schedules,
+global-norm clipping, and PartitionSpec derivation so optimizer state shards
+exactly like (or more compactly than) its parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]    # (grads, state, params)
+    state_specs: Callable[[Any], Any]           # param_specs -> state specs
+
+
+def warmup_cosine(peak_lr: float, warmup: int = 200, total: int = 10_000,
+                  floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / warmup)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return sched
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def make_adamw(lr: Callable, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+               clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        gn = jnp.zeros((), jnp.float32)
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        lr_t = lr(c)
+        def upd(mm, vv, p):
+            mhat = mm / (1 - b1 ** cf)
+            vhat = vv / (1 - b2 ** cf)
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * step).astype(p.dtype)
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": c}, {"grad_norm": gn,
+                                                       "lr": lr_t}
+
+    def state_specs(param_specs, param_shapes=None):
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-lean for the 236B config)
+
+
+def make_adafactor(lr: Callable, *, decay=0.8, eps=1e-30, clip_threshold=1.0,
+                   min_dim_factored=128, weight_decay=0.0,
+                   clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def slot(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(slot, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        gn = jnp.zeros((), jnp.float32)
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+        lr_t = lr(c)
+
+        def upd(slot, g, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in slot:
+                vr = beta * slot["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * slot["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                pre = g * jax.lax.rsqrt(denom + eps)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                pre = g * jax.lax.rsqrt(v + eps)
+                new_slot = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(pre)) + 1e-12)
+            pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                pre = pre + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * pre).astype(p.dtype), new_slot
+
+        flat = jax.tree.map(upd, state["slots"], grads, params,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and ("v" in x or "vr" in x))
+        updates = jax.tree.map(lambda x: x[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        slots = jax.tree.map(lambda x: x[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"slots": slots, "count": c}, {"grad_norm": gn,
+                                                       "lr": lr_t}
+
+    def state_specs(param_specs, param_shapes):
+        # vr drops the last param axis, vc the second-to-last; specs follow.
+        def slot_spec(spec, shp):
+            axes = tuple(spec) if spec is not None else ()
+            axes = axes + (None,) * (len(shp.shape) - len(axes))
+            if factored(shp):
+                return {"vr": P(*axes[:-1]), "vc": P(*(axes[:-2] + axes[-1:]))}
+            return {"v": P(*axes)}
+        slots = jax.tree.map(slot_spec, param_specs, param_shapes,
+                             is_leaf=lambda x: isinstance(x, P))
+        return {"slots": slots, "count": P()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def make_optimizer(name: str, lr_peak: float = 3e-4, **kw) -> Optimizer:
+    sched = warmup_cosine(lr_peak)
+    if name == "adamw":
+        return make_adamw(sched, **kw)
+    if name == "adafactor":
+        return make_adafactor(sched, **kw)
+    raise ValueError(f"unknown optimizer {name}")

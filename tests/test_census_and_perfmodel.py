@@ -1,0 +1,115 @@
+"""core/isa + core/perfmodel tests: census FLOPs/trip-count correctness on
+real compiled modules, the collective parser on canned SPMD HLO, and the
+paper-table consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.isa import hlo_census as hc
+from repro.core.microbench import tables
+from repro.core.perfmodel import predictor
+from repro.core.perfmodel.hardware import TPU_V5E
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_census_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 96), jnp.float32)
+    text = _compiled_text(lambda x, y: x @ y, a, b)
+    c = hc.census(text)
+    assert c["flops"] == 2 * 64 * 96 * 128
+
+
+def test_census_scan_multiplies_trip_count():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ x * 0.001, ()
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    text = _compiled_text(f, x)
+    c = hc.census(text)
+    one = 2 * 32 * 32 * 32
+    assert c["flops"] >= 10 * one * 0.99, c["flops"]
+    assert 10 in c["while_trips"].values()
+
+
+def test_census_memory_dynamic_slice_not_overcounted():
+    big = jax.ShapeDtypeStruct((100, 1024), jnp.float32)
+
+    def f(x):
+        def body(c, i):
+            return c + jax.lax.dynamic_index_in_dim(x, i, keepdims=False), ()
+        out, _ = jax.lax.scan(body, jnp.zeros((1024,)),
+                              jnp.arange(100, dtype=jnp.int32))
+        return out
+
+    text = _compiled_text(f, big)
+    c = hc.census(text)
+    full = 100 * 1024 * 4
+    # each iteration should charge ~1 row (4KB), not the full 400KB array
+    assert c["hbm_bytes"] < 40 * full
+
+
+_CANNED = """
+HloModule canned, num_partitions=8
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ar = f32[64,128]{1,0} all-reduce(%p0), replica_groups=[1,8]<=[8], to_apply=%add
+  %ag = f32[64,1024]{1,0} all-gather(%ar), replica_groups=[1,8]<=[8], dimensions={1}
+  %rs = f32[64,16]{1,0} reduce-scatter(%p0), replica_groups=[2,4]<=[8], dimensions={1}, to_apply=%add
+  %cp = f32[64,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[64,128]{1,0} add(%cp, %p0)
+}
+"""
+
+
+def test_collective_parser_wire_bytes():
+    rows = {r["op"]: r for r in hc.collective_table(_CANNED, n_devices=8)}
+    b = 64 * 128 * 4
+    assert rows["ar"]["kind"] == "all-reduce"
+    np.testing.assert_allclose(rows["ar"]["wire_bytes"], 2 * b * 7 / 8)
+    np.testing.assert_allclose(rows["ag"]["wire_bytes"], 64 * 1024 * 4 * 7 / 8)
+    assert rows["rs"]["group"] == 4
+    np.testing.assert_allclose(rows["rs"]["wire_bytes"], b * 3 / 4)
+    np.testing.assert_allclose(rows["cp"]["wire_bytes"], b)
+
+
+def test_op_mapping_table():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    lowered = jax.jit(lambda x: jnp.tanh(x @ x)).lower(a)
+    m = hc.op_mapping_table(lowered.as_text(),
+                            lowered.compile().as_text())
+    assert m["n_source_ops"] > 0 and m["n_optimized_ops"] > 0
+    assert "dot" in m["optimized"] or "fusion" in m["optimized"]
+
+
+def test_paper_table_consistency():
+    t = tables.ampere_table()
+    checks = predictor.validate_against_paper(t)
+    assert all(checks.values()), {k: v for k, v in checks.items() if not v}
+
+
+def test_predictor_terms():
+    census = {"flops": 197e12, "hbm_bytes": 0.0,
+              "collective_bytes_total": 200e9 * 1.0,
+              "op_histogram": {"fusion": 1000, "dot": 100}}
+    p = predictor.predict(census, mem_bytes_analytic=819e9, table=tables.v5e_table())
+    np.testing.assert_allclose(p.compute_s, 1.0)
+    np.testing.assert_allclose(p.memory_s, 1.0)
+    np.testing.assert_allclose(p.collective_s, 1.0)
+    assert p.step_s >= 1.0
+    assert p.issue_overhead_s > 0
+
+
+def test_v5e_table_peaks_match_hardware_spec():
+    t = tables.v5e_table()
+    assert t["mxu"]["bf16.f32"]["peak_tflops"] * 1e12 == TPU_V5E.peak_flops_bf16
+    assert t["memory"]["hbm_bandwidth_gbs"] * 1e9 == TPU_V5E.hbm_bandwidth

@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import compression as C
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 10
+    q, s = C.quantize_int8(x)
+    y = C.dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(x - y))
+    bound = np.asarray(s).max() / 2 + 1e-6
+    assert err.max() <= bound
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 100.0))
+def test_error_feedback_bounded(seed, scale):
+    """EF property: the residual never accumulates beyond one quantization
+    step's error (it is re-absorbed every round)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (256,)) * scale
+    err = jnp.zeros((256,))
+    for _ in range(8):
+        q, s, err = C.ef_compress_leaf(g, err)
+    q_scale = float(np.asarray(s).max())
+    assert float(jnp.abs(err).max()) <= q_scale  # one-step error bound
+
+
+def test_ef_mean_preserved_over_time():
+    """Long-run average of dequantized messages converges to the true g."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    err = jnp.zeros((128,))
+    total = jnp.zeros((128,))
+    N = 64
+    for _ in range(N):
+        q, s, err = C.ef_compress_leaf(g, err)
+        total = total + C.dequantize_int8(q, s, g.shape)
+    np.testing.assert_allclose(np.asarray(total / N), np.asarray(g),
+                               atol=2e-2)
+
+
+def test_compression_ratio_about_4x():
+    grads = {"w": jnp.zeros((1024, 1024))}
+    r = C.compression_ratio(grads)
+    assert 0.2 < r < 0.3  # int8 + scales ~ 26% of f32

