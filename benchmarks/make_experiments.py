@@ -1,14 +1,21 @@
 """Regenerate EXPERIMENTS.md from the dry-run artifacts + the perf log.
 
 Run after `python -m repro.launch.dryrun --all [--opt]`:
-  PYTHONPATH=src python -m benchmarks.make_experiments
+  PYTHONPATH=src python -m benchmarks.make_experiments [--results-dir D] [--out F]
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 from pathlib import Path
 
-from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction  # noqa: E402
 
 ROOT = Path(__file__).resolve().parent.parent
 RESULTS = ROOT / "results" / "dryrun"
@@ -258,10 +265,15 @@ TBL_HDR = ("| arch | cell | mesh | compute_s | memory_s | collective_s | "
            "|---|---|---|---|---|---|---|---|---|")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results-dir", type=Path, default=RESULTS)
+    ap.add_argument("--out", type=Path, default=ROOT / "EXPERIMENTS.md")
+    args = ap.parse_args(argv)
+
     base_rows, opt_rows, dry_rows = [], [], []
     pairs = {}
-    for p in sorted(RESULTS.glob("*.json")):
+    for p in sorted(args.results_dir.glob("*.json")):
         d = json.loads(p.read_text())
         r = from_dryrun(d)
         if "__opt" in d["mesh"]:
@@ -300,8 +312,8 @@ def main():
         roofline_opt=TBL_HDR + "\n" + "\n".join(opt_rows),
         opt_compare="\n".join(comp),
     )
-    (ROOT / "EXPERIMENTS.md").write_text(text)
-    print(f"wrote EXPERIMENTS.md: {len(base_rows)} baseline rows, "
+    args.out.write_text(text)
+    print(f"wrote {args.out.name}: {len(base_rows)} baseline rows, "
           f"{len(opt_rows)} opt rows")
 
 

@@ -1,109 +1,80 @@
-"""One benchmark per paper table, emitting `name,us_per_call,derived` CSV.
+"""One benchmark per paper table — a thin CLI over the campaign subsystem.
 
-Table I   -> chain-length CPI convergence (first-op overhead amortization)
-Table II  -> dependent vs independent per-op latency
-Table III -> matrix-unit (MXU) latency/throughput per dtype x shape
-Table IV  -> memory-hierarchy pointer-chase latencies
-Table V   -> ISA mapping: StableHLO -> optimized-HLO expansion per op class
+Table I   -> chain-length CPI convergence      (campaign: alu_chain)
+Table II  -> dependent vs independent latency  (campaign: alu_chain)
+Table III -> matrix-unit latency/throughput    (campaign: mxu_shapes)
+Table IV  -> memory-hierarchy pointer chase    (campaign: memory_chase)
+Table V   -> StableHLO -> optimized-HLO map    (campaign: isa_mapping)
+
+Measurement lives in `repro.core.campaign`; this script either runs the
+campaigns (resumable) and prints the tables, or — with `--from-results` —
+REGENERATES the tables from existing schema-versioned result files alone,
+with no re-measurement:
+
+  python benchmarks/paper_tables.py --from-results results/campaign/alu_chain.json
 
 On this CPU container the numbers characterize the host (the methodology is
-the deliverable; the TPU numbers come from running the same suite on real
-hardware).  The A100 columns from the paper ship in
-repro/core/calibration/ampere_a100.json and are cross-checked by unit tests.
+the deliverable; TPU numbers come from the same campaigns on real hardware).
+The paper's own A100 columns ship in repro/core/calibration/ampere_a100.json
+and are cross-checked by unit tests.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import argparse
+import sys
+from pathlib import Path
 
-from repro.core.microbench import harness, memory, mxu
-from repro.core.isa import hlo_census as hc
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-ROWS = []
+from repro.core.campaign import report, runner  # noqa: E402
+from repro.core.campaign.results import load_results  # noqa: E402
 
-
-def emit(name: str, us: float, derived: str = ""):
-    ROWS.append((name, us, derived))
-    print(f"{name},{us:.3f},{derived}")
-
-
-def table1_chain_convergence():
-    r = harness.run_chain(harness.OPS["add"], "add",
-                          lengths=(1, 2, 3, 4, 16, 64))
-    for k in sorted(r.cpi_curve):
-        emit(f"table1/add.f32/K={k}", r.times_s[r.lengths.index(k)] * 1e6,
-             f"t(K)/(K*t_inf)={r.cpi_curve[k]:.2f}")
+# paper-table order (Tables I/II share the alu_chain campaign)
+TABLE_EXPERIMENTS = ("alu_chain", "mxu_shapes", "memory_chase", "isa_mapping")
 
 
-def table2_dep_vs_indep():
-    ops = ["add", "mul", "fma", "div", "rsqrt", "exp", "tanh"]
-    for dt in ("float32", "int32"):
-        for op in ops:
-            if dt == "int32" and op in harness.FLOAT_ONLY:
-                continue
-            for dep in (True, False):
-                r = harness.run_chain(harness.OPS[op], op, jnp.dtype(dt),
-                                      lengths=(4, 16, 64), dependent=dep)
-                tag = "dep" if dep else "ind"
-                emit(f"table2/{op}.{dt}.{tag}", r.per_op_s * 1e6,
-                     f"overhead_us={r.overhead_s*1e6:.2f}")
+def run_all(quick: bool = True,
+            out_dir: str = str(runner.DEFAULT_RESULTS_DIR)):
+    """Run every paper-table campaign (resuming completed cells) and print
+    the tables; kept for `benchmarks.run` and interactive use."""
+    rows = []
+    for name in TABLE_EXPERIMENTS:
+        rep = runner.run(name, out_dir=out_dir, quick=quick)
+        print(f"# {rep.summary()}", file=sys.stderr)
+        doc = load_results(rep.path)
+        rows.extend(report.table_for(doc))
+    report.render_rows(rows)
+    return rows
 
 
-def table3_mxu():
-    for dt in ("bfloat16", "float32", "int8"):
-        real_dt = dt if dt != "int8" else "bfloat16"  # CPU backend: no s8 dot
-        for shape in ((128, 128, 128), (256, 256, 256), (512, 512, 128)):
-            dep = shape[0] == shape[2]   # a dependent chain needs square A
-            r = mxu.run_mxu(real_dt, shape, dependent=dep, lengths=(1, 2, 4))
-            tag = "dep" if dep else "ind"
-            emit(f"table3/{dt}.m{shape[0]}n{shape[1]}k{shape[2]}.{tag}",
-                 r.per_op_s * 1e6, f"tflops={r.tflops:.3f}")
+def from_results(paths) -> None:
+    """Regenerate paper tables from result files alone (no measurement)."""
+    report.render_result_files(paths)
 
 
-def table4_memory():
-    for size in (16 * 2**10, 256 * 2**10, 4 * 2**20, 64 * 2**20):
-        r = memory.run_chase(size, hop_counts=(256, 1024, 4096))
-        emit(f"table4/chase_{size//1024}KiB", r.per_hop_s * 1e6,
-             f"per_hop_ns={r.per_hop_s*1e9:.1f}")
-    bw = memory.streaming_bandwidth()
-    emit("table4/streaming_read", 0.0, f"GBps={bw/1e9:.2f}")
+def main(argv=None) -> int:
+    import signal
+    if hasattr(signal, "SIGPIPE"):   # die quietly when piped into `grep -q`
+        signal.signal(signal.SIGPIPE, signal.SIG_DFL)
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--from-results", nargs="+", metavar="RESULT_JSON",
+                   help="regenerate tables from these campaign result files "
+                        "without running anything")
+    p.add_argument("--quick", action="store_true", default=True,
+                   help="reduced grids (default on; use --full to override)")
+    p.add_argument("--full", dest="quick", action="store_false")
+    p.add_argument("--results-dir", default=str(runner.DEFAULT_RESULTS_DIR))
+    args = p.parse_args(argv)
+
+    if args.from_results:
+        from_results(args.from_results)
+        return 0
+    run_all(quick=args.quick, out_dir=args.results_dir)
+    return 0
 
 
-def table5_isa_mapping():
-    """StableHLO -> optimized HLO per op class (the PTX->SASS table)."""
-    cases = {
-        "add.f32": lambda x: x + 1.0,
-        "mul.f32": lambda x: x * 1.5,
-        "fma.f32": lambda x: x * 1.5 + 2.0,
-        "div.f32": lambda x: x / 1.5,
-        "rsqrt.f32": lambda x: jax.lax.rsqrt(jnp.abs(x) + 1e-3),
-        "exp.f32": lambda x: jnp.exp(x * 1e-3),
-        "tanh.f32": lambda x: jnp.tanh(x),
-        "softmax.f32": lambda x: jax.nn.softmax(x, axis=-1),
-        "matmul.f32": lambda x: x @ x.T,
-        "reduce.f32": lambda x: jnp.sum(x, axis=-1),
-        "gather": lambda x: x[jnp.arange(8) % x.shape[0]],
-        "scan8": lambda x: jax.lax.scan(lambda c, _: (c * 1.01, ()), x,
-                                        None, length=8)[0],
-    }
-    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-    for name, fn in cases.items():
-        lowered = jax.jit(fn).lower(x)
-        compiled = lowered.compile()
-        m = hc.op_mapping_table(lowered.as_text(), compiled.as_text())
-        c = hc.census(compiled.as_text())
-        top = ",".join(f"{k}x{int(v)}" for k, v in
-                       list(c["op_histogram"].items())[:3])
-        emit(f"table5/{name}", 0.0,
-             f"src_ops={m['n_source_ops']};opt_ops={m['n_optimized_ops']};"
-             f"top={top};flops={int(c['flops'])}")
-
-
-def run_all():
-    table1_chain_convergence()
-    table2_dep_vs_indep()
-    table3_mxu()
-    table4_memory()
-    table5_isa_mapping()
-    return ROWS
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,24 +1,35 @@
-"""§Roofline: the three-term roofline table over every dry-run artifact.
+"""§Roofline CLI: the three-term roofline table over dry-run artifacts,
+plus the measured roofline-calibration peaks from the campaign runner.
 
-Reads results/dryrun/*.json (produced by `python -m repro.launch.dryrun
---all`), derives compute/memory/collective seconds per (arch x cell x mesh),
-identifies the dominant term and the MODEL_FLOPS/HLO_FLOPs useful ratio, and
-prints the table §Roofline of EXPERIMENTS.md is generated from.
+  python benchmarks/roofline.py [--mesh pod16x16] [--results-dir DIR]
+      render compute/memory/collective seconds per (arch x cell x mesh)
+      from results/dryrun/*.json and flag the §Perf focus cells.
+
+  python benchmarks/roofline.py --calibration
+      show the achieved peaks measured by the `roofline_calibration`
+      campaign next to the hardware-spec peaks they anchor.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 from pathlib import Path
 
-from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+from repro.core.perfmodel.roofline import from_dryrun, roofline_fraction  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results" / "dryrun"
 
 
-def load_all(mesh_filter: str | None = None):
+def load_all(mesh_filter: str | None = None, results_dir: Path = RESULTS):
     rows = []
-    for p in sorted(RESULTS.glob("*.json")):
+    for p in sorted(Path(results_dir).glob("*.json")):
         d = json.loads(p.read_text())
         if mesh_filter and d["mesh"] != mesh_filter:
             continue
@@ -44,26 +55,72 @@ def render(rows, file=sys.stdout):
     return out
 
 
-def main():
-    mesh = sys.argv[1] if len(sys.argv) > 1 else None
-    rows = load_all(mesh)
+def focus_cells(out, file=sys.stdout) -> None:
+    """The three most interesting single-pod cells for §Perf."""
+    single = [(r, f) for r, f in out if r.mesh == "pod16x16"]
+    if not single:
+        return
+    worst = min(single, key=lambda rf: rf[1])
+    coll = max(single, key=lambda rf: rf[0].collective_s
+               / max(rf[0].step_s, 1e-12))
+    print("\nworst roofline fraction :",
+          worst[0].arch, worst[0].cell, f"{100*worst[1]:.2f}%", file=file)
+    print("most collective-bound   :",
+          coll[0].arch, coll[0].cell,
+          f"{coll[0].collective_s:.3f}s of {coll[0].step_s:.3f}s", file=file)
+
+
+def show_calibration(campaign_dir: Path) -> int:
+    """Measured achieved peaks vs the hardware-spec peaks they anchor."""
+    from repro.core.campaign.results import load_results_dir
+    from repro.core.perfmodel.hardware import TPU_V5E
+
+    docs = load_results_dir(campaign_dir, ("roofline_calibration",))
+    doc = docs.get("roofline_calibration")
+    if not doc:
+        print("no roofline_calibration results; run "
+              "`python -m repro.core.campaign run roofline_calibration`")
+        return 1
+    spec = {"mxu_peak_tflops": TPU_V5E.peak_flops_bf16 / 1e12,
+            "hbm_stream_gbs": TPU_V5E.hbm_bandwidth / 1e9,
+            "dispatch_overhead_us": None}
+    print(f"backend: {doc.get('backend', '?')}   "
+          f"(spec column: {TPU_V5E.name})")
+    print(f"{'term':24s} {'measured':>12s} {'unit':>8s} {'spec':>10s}")
+    for key in sorted(doc["cells"]):
+        rec = doc["cells"][key]
+        if rec.get("status") != "ok":
+            continue
+        term = rec["params"]["term"]
+        ref = spec.get(term)
+        print(f"{term:24s} {rec['metrics']['value']:12.3f} "
+              f"{rec['metrics']['unit']:>8s} "
+              f"{ref if ref is not None else '-':>10}")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("mesh", nargs="?", default=None,
+                   help="optional mesh filter, e.g. pod16x16")
+    p.add_argument("--results-dir", type=Path, default=RESULTS,
+                   help="dry-run artifact directory")
+    p.add_argument("--campaign-dir", type=Path,
+                   default=ROOT / "results" / "campaign")
+    p.add_argument("--calibration", action="store_true",
+                   help="show measured roofline-calibration peaks instead")
+    args = p.parse_args(argv)
+
+    if args.calibration:
+        return show_calibration(args.campaign_dir)
+    rows = load_all(args.mesh, args.results_dir)
     if not rows:
         print("no dry-run artifacts found; run "
               "`python -m repro.launch.dryrun --all` first")
-        return
-    out = render(rows)
-    # summary: the three most interesting cells for §Perf
-    single = [(r, f) for r, f in out if r.mesh == "pod16x16"]
-    if single:
-        worst = min(single, key=lambda rf: rf[1])
-        coll = max(single, key=lambda rf: rf[0].collective_s
-                   / max(rf[0].step_s, 1e-12))
-        print("\nworst roofline fraction :",
-              worst[0].arch, worst[0].cell, f"{100*worst[1]:.2f}%")
-        print("most collective-bound   :",
-              coll[0].arch, coll[0].cell,
-              f"{coll[0].collective_s:.3f}s of {coll[0].step_s:.3f}s")
+        return 0
+    focus_cells(render(rows))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,24 +1,96 @@
-"""Benchmark driver: one function per paper table (CSV: name,us_per_call,
-derived) plus the model-level roofline summary over any existing dry-run
-artifacts.  `python -m benchmarks.run`"""
+"""Benchmark driver — a thin CLI over the campaign runner.
+
+  python benchmarks/run.py --experiment alu_chain --quick
+      run (or resume) one named campaign; results land as schema-versioned
+      JSON + CSV under results/campaign/ and completed cells are skipped on
+      rerun.
+
+  python benchmarks/run.py --experiment all --quick
+      the full paper-table suite in CI smoke mode.
+
+  python benchmarks/run.py
+      legacy behaviour: run every campaign, print the paper tables as
+      `name,us_per_call,derived` CSV, then the roofline summary over any
+      existing dry-run artifacts.
+"""
 from __future__ import annotations
 
+import argparse
+import sys
+from pathlib import Path
 
-def main() -> None:
-    from benchmarks import paper_tables
-    print("name,us_per_call,derived")
-    paper_tables.run_all()
+# allow `python benchmarks/run.py` from a checkout without PYTHONPATH=src
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-    # roofline summary (skipped silently if no dry-run artifacts exist)
+from repro.core.campaign import registry, report, runner  # noqa: E402
+
+
+def run_experiments(names, *, quick: bool, force: bool, out_dir: str,
+                    verbose: bool) -> int:
+    rc = 0
+    for name in names:
+        rep = runner.run(name, out_dir=out_dir, quick=quick, force=force,
+                         progress=print if verbose else None)
+        print(f"# {rep.summary()}", file=sys.stderr)
+        if rep.failed:
+            rc = 1
+    report.render_result_files(Path(out_dir) / f"{n}.json" for n in names)
+    return rc
+
+
+def roofline_summary() -> None:
+    """Model-level roofline over dry-run artifacts (skipped if absent)."""
     try:
-        from benchmarks import roofline
-        rows = roofline.load_all("pod16x16")
+        import roofline as roofline_cli
+    except ImportError:
+        from benchmarks import roofline as roofline_cli
+    try:
+        rows = roofline_cli.load_all("pod16x16")
         if rows:
             print()
-            roofline.render(rows)
-    except Exception as e:  # noqa
+            roofline_cli.render(rows)
+    except Exception as e:  # noqa: BLE001  (summary is best-effort)
         print(f"roofline-summary-skipped,0.0,{e!r}"[:120])
 
 
+def main(argv=None) -> int:
+    import signal
+    if hasattr(signal, "SIGPIPE"):   # die quietly when piped into `grep -q`
+        signal.signal(signal.SIGPIPE, signal.SIG_DFL)
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--experiment", action="append", default=None,
+                   help="named campaign to run (repeatable, or 'all'); "
+                        f"known: {', '.join(registry.names())}")
+    p.add_argument("--quick", action="store_true", default=True,
+                   help="reduced grids + shorter sweeps (the default; "
+                        "full sweeps take minutes per campaign)")
+    p.add_argument("--full", dest="quick", action="store_false",
+                   help="run the full grids instead of the quick sweeps")
+    p.add_argument("--force", action="store_true",
+                   help="re-measure already-completed cells")
+    p.add_argument("--results-dir", default=str(runner.DEFAULT_RESULTS_DIR))
+    p.add_argument("--verbose", "-v", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.experiment:
+        names = (registry.names() if "all" in args.experiment
+                 else args.experiment)
+        unknown = [n for n in names if n not in registry.REGISTRY]
+        if unknown:
+            p.error(f"unknown experiment(s) {', '.join(unknown)}; "
+                    f"known: {', '.join(registry.names())} (or 'all')")
+        return run_experiments(names, quick=args.quick, force=args.force,
+                               out_dir=args.results_dir, verbose=args.verbose)
+
+    # legacy: full paper-table suite + roofline summary
+    rc = run_experiments(registry.names(), quick=args.quick, force=args.force,
+                         out_dir=args.results_dir, verbose=args.verbose)
+    roofline_summary()
+    return rc
+
+
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

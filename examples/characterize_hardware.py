@@ -1,22 +1,33 @@
-"""Reproduce the paper's experiment suite on the current backend: per-op
-latency tables (dependent/independent), the memory-hierarchy chase, and
-matrix-unit probes; then diff the result against the shipped calibrations.
+"""Reproduce the paper's experiment suite on the current backend via the
+campaign runner: per-op latency tables (dependent/independent), the
+memory-hierarchy chase, matrix-unit probes and the roofline peaks; then
+diff the result against the shipped calibrations.
 
 This is the paper-as-a-tool: on a real TPU the emitted table refreshes
 repro/core/calibration/tpu_v5e.json; on CPU it characterizes the host.
+Campaign results persist under results/campaign/ — interrupting and
+rerunning this script resumes instead of restarting.
 
-Run:  PYTHONPATH=src python examples/characterize_hardware.py
+Run:  PYTHONPATH=src python examples/characterize_hardware.py [--full]
 """
+import argparse
 import json
+import pathlib
 
 import jax
 
 from repro.core.microbench.tables import ampere_table, calibrate, v5e_table
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full grids instead of the quick sweep")
+    ap.add_argument("--results-dir", default="results/campaign")
+    args = ap.parse_args(argv)
+
     print(f"backend: {jax.default_backend()}")
-    table = calibrate(quick=True)
+    table = calibrate(quick=not args.full, results_dir=args.results_dir)
 
     print("\n== per-op latency (ns, steady state) ==")
     for k, v in sorted(table["ops"].items()):
@@ -27,10 +38,16 @@ def main():
     print("\n== memory hierarchy (pointer chase, ns/hop) ==")
     for size, v in table["memory"].items():
         print(f"  {int(size)//1024:8d} KiB   {v['per_hop_ns']:8.1f}")
+    for size, v in table.get("memory_streaming", {}).items():
+        print(f"  {size:>8s} streaming read   {v['gbps']:8.2f} GB/s")
 
     print("\n== matrix unit ==")
     for k, v in table["mxu"].items():
         print(f"  {k:32s} {v['per_op_us']:8.2f}us  {v['tflops']:8.3f} TFLOP/s")
+
+    print("\n== roofline peaks (measured) ==")
+    for k, v in table["roofline"].items():
+        print(f"  {k:24s} {v['value']:10.3f} {v['unit']}")
 
     print("\n== reference tables shipped with the repo ==")
     a100 = ampere_table()
@@ -40,11 +57,11 @@ def main():
     v5e = v5e_table()
     print(f"  tpu_v5e: {len(v5e['vpu'])} VPU rows, "
           f"MXU bf16 peak {v5e['mxu']['bf16.f32']['peak_tflops']} TFLOP/s")
-    out = "results/host_calibration.json"
-    import pathlib
-    pathlib.Path("results").mkdir(exist_ok=True)
-    pathlib.Path(out).write_text(json.dumps(table, indent=1))
-    print(f"\nwrote {out}")
+
+    out = pathlib.Path("results/host_calibration.json")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(table, indent=1))
+    print(f"\nwrote {out} (campaign cells in {args.results_dir}/)")
 
 
 if __name__ == "__main__":

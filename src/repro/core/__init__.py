@@ -1,1 +1,2 @@
 from repro.core import isa, microbench, perfmodel  # noqa
+from repro.core import campaign  # noqa  (last: depends on the above)

@@ -1,0 +1,16 @@
+"""Unified microbenchmark campaign runner.
+
+The paper's deliverable is a set of latency/CPI tables produced by sweeping
+instructions, dtypes and memory levels; this subsystem is the single
+structured runner that keeps those campaigns reproducible: a registry of
+named experiments (``registry``), deterministic grid expansion (``spec``),
+a resumable scheduler (``runner``), schema-versioned persistence
+(``results``) and the paper-table/report generator (``report``).
+
+CLI: ``PYTHONPATH=src python -m repro.core.campaign run <experiment>``.
+"""
+from repro.core.campaign import report, results, runner, spec  # noqa: F401
+from repro.core.campaign.registry import REGISTRY, get, names, register  # noqa: F401
+from repro.core.campaign.results import ResultStore, load_results  # noqa: F401
+from repro.core.campaign.runner import run, run_many  # noqa: F401
+from repro.core.campaign.spec import Cell, Experiment, cell_key  # noqa: F401

@@ -1,0 +1,267 @@
+"""The named-experiment registry: one entry per paper campaign.
+
+Each experiment maps a published table of the paper (Abdelkhalik et al.,
+arXiv:2208.11174) onto this backend's measurement primitives:
+
+  * ``alu_chain``            - Tables I/II: per-op latency via chain-length
+                               regression, dependent vs independent
+  * ``memory_chase``         - Table IV / Fig. 2-3: pointer-chase walk of the
+                               memory hierarchy + streaming bandwidth
+  * ``mxu_shapes``           - Table III: matrix-unit latency/throughput per
+                               dtype x tile shape (the WMMA fragment sweep)
+  * ``roofline_calibration`` - achieved peaks (MXU TFLOP/s, HBM GB/s,
+                               dispatch overhead) that anchor the perf model
+  * ``isa_mapping``          - Table V: source -> optimized instruction
+                               expansion per op class (the PTX->SASS map)
+
+Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
+dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+from repro.core.campaign.spec import Experiment
+
+# ---------------------------------------------------------------------------
+# cell runners (one grid point each; heavy imports stay inside the calls so
+# `campaign list` and the result/report tooling never pay jax startup twice)
+# ---------------------------------------------------------------------------
+
+
+def run_alu_cell(params: Dict[str, Any], quick: bool = False) -> Dict[str, Any]:
+    import jax.numpy as jnp
+    from repro.core.microbench import harness
+
+    lengths = (4, 16, 64) if quick else (4, 16, 64, 256)
+    r = harness.run_chain(harness.OPS[params["op"]], params["op"],
+                          dtype=jnp.dtype(params["dtype"]), lengths=lengths,
+                          dependent=params["dependent"])
+    return {
+        "per_op_ns": r.per_op_s * 1e9,
+        "overhead_ns": r.overhead_s * 1e9,
+        "lengths": list(r.lengths),
+        "times_us": [t * 1e6 for t in r.times_s],
+        "cpi_curve": {str(k): v for k, v in r.cpi_curve.items()},
+    }
+
+
+def run_chase_cell(params: Dict[str, Any], quick: bool = False
+                   ) -> Dict[str, Any]:
+    from repro.core.microbench import memory
+
+    size_bytes = params["size_kib"] * 1024
+    if params.get("access", "chase") == "stream":
+        bw = memory.streaming_bandwidth(size_bytes)
+        return {"gbps": bw / 1e9, "working_set_bytes": size_bytes}
+    hops = (64, 256, 1024) if quick else (256, 1024, 4096)
+    r = memory.run_chase(size_bytes, hop_counts=hops)
+    return {
+        "per_hop_ns": r.per_hop_s * 1e9,
+        "overhead_ns": r.overhead_s * 1e9,
+        "working_set_bytes": r.working_set_bytes,
+        "hops": list(r.hops),
+        "times_us": [t * 1e6 for t in r.times_s],
+    }
+
+
+def run_mxu_cell(params: Dict[str, Any], quick: bool = False
+                 ) -> Dict[str, Any]:
+    from repro.core.microbench import mxu
+
+    lengths = (1, 2, 4) if quick else (1, 2, 4, 8)
+    # no s8 dot on this harness's backends: int8 cells measure the bf16
+    # path (the old table3 behaviour) and record the substitution
+    dtype = params["dtype"]
+    compute_dtype = "bfloat16" if dtype == "int8" else dtype
+    r = mxu.run_mxu(dtype=compute_dtype, shape=tuple(params["shape"]),
+                    dependent=params["dependent"], lengths=lengths)
+    return {
+        "per_op_us": r.per_op_s * 1e6,
+        "overhead_us": r.overhead_s * 1e6,
+        "flops": r.flops,
+        "tflops": r.tflops,
+        "compute_dtype": compute_dtype,
+    }
+
+
+def run_roofline_cal_cell(params: Dict[str, Any], quick: bool = False
+                          ) -> Dict[str, Any]:
+    """Measure one achieved-peak term of the roofline on this backend."""
+    term = params["term"]
+    if term == "mxu_peak_tflops":
+        from repro.core.microbench import mxu
+        shape = (256, 256, 256) if quick else (512, 512, 512)
+        r = mxu.run_mxu(dtype="float32", shape=shape, dependent=False,
+                        lengths=(1, 2, 4))
+        return {"value": r.tflops, "unit": "TFLOP/s",
+                "detail": f"independent f32 matmul {shape}"}
+    if term == "hbm_stream_gbs":
+        from repro.core.microbench import memory
+        size = 16 * 2**20 if quick else 64 * 2**20
+        bw = memory.streaming_bandwidth(size)
+        return {"value": bw / 1e9, "unit": "GB/s",
+                "detail": f"sequential reduce over {size // 2**20} MiB"}
+    if term == "dispatch_overhead_us":
+        import jax.numpy as jnp
+        from repro.core.microbench import harness
+        r = harness.run_chain(harness.OPS["add"], "add", dtype=jnp.float32,
+                              lengths=(1, 2, 4, 8), dependent=True)
+        return {"value": r.overhead_s * 1e6, "unit": "us",
+                "detail": "t(K)=a+bK regression intercept, add.f32"}
+    raise ValueError(f"unknown roofline calibration term {term!r}")
+
+
+def run_isa_cell(params: Dict[str, Any], quick: bool = False
+                 ) -> Dict[str, Any]:
+    """StableHLO -> optimized-HLO expansion for one op class (Table V)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.isa import hlo_census as hc
+
+    cases = {
+        "add.f32": lambda x: x + 1.0,
+        "mul.f32": lambda x: x * 1.5,
+        "fma.f32": lambda x: x * 1.5 + 2.0,
+        "div.f32": lambda x: x / 1.5,
+        "rsqrt.f32": lambda x: jax.lax.rsqrt(jnp.abs(x) + 1e-3),
+        "exp.f32": lambda x: jnp.exp(x * 1e-3),
+        "tanh.f32": lambda x: jnp.tanh(x),
+        "softmax.f32": lambda x: jax.nn.softmax(x, axis=-1),
+        "matmul.f32": lambda x: x @ x.T,
+        "reduce.f32": lambda x: jnp.sum(x, axis=-1),
+        "gather": lambda x: x[jnp.arange(8) % x.shape[0]],
+        "scan8": lambda x: jax.lax.scan(lambda c, _: (c * 1.01, ()), x,
+                                        None, length=8)[0],
+    }
+    fn = cases[params["case"]]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    lowered = jax.jit(fn).lower(x)
+    compiled = lowered.compile()
+    m = hc.op_mapping_table(lowered.as_text(), compiled.as_text())
+    c = hc.census(compiled.as_text())
+    top = {k: int(v) for k, v in list(c["op_histogram"].items())[:3]}
+    return {
+        "n_source_ops": m["n_source_ops"],
+        "n_optimized_ops": m["n_optimized_ops"],
+        "flops": int(c["flops"]),
+        "top_ops": top,
+    }
+
+
+ISA_CASES = ("add.f32", "mul.f32", "fma.f32", "div.f32", "rsqrt.f32",
+             "exp.f32", "tanh.f32", "softmax.f32", "matmul.f32",
+             "reduce.f32", "gather", "scan8")
+
+
+# ---------------------------------------------------------------------------
+# grids
+# ---------------------------------------------------------------------------
+
+# mirrors harness.OPS / INT_OPS / FLOAT_ONLY without importing jax at
+# registry-import time; the constraint keeps the product paper-legal
+_ALU_OPS = ("add", "sub", "mul", "fma", "max", "min", "abs", "and", "xor",
+            "popc", "clz", "div", "rem", "rsqrt", "sqrt", "exp", "log",
+            "sin", "tanh", "sigmoid", "select")
+_INT_OPS = {"and", "xor", "popc", "clz"}
+_FLOAT_ONLY = {"rsqrt", "sqrt", "exp", "log", "sin", "tanh", "sigmoid",
+               "div", "fma"}
+
+
+def _alu_legal(params: Dict[str, Any]) -> bool:
+    is_int = params["dtype"].startswith("int")
+    if is_int and params["op"] in _FLOAT_ONLY:
+        return False
+    if not is_int and params["op"] in _INT_OPS:
+        return False
+    return True
+
+
+REGISTRY: Dict[str, Experiment] = {}
+
+
+def register(exp: Experiment) -> Experiment:
+    if exp.name in REGISTRY:
+        raise ValueError(f"experiment {exp.name!r} already registered")
+    REGISTRY[exp.name] = exp
+    return exp
+
+
+def get(name: str) -> Experiment:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown experiment {name!r}; available: "
+                       f"{', '.join(names())}") from None
+
+
+def names() -> List[str]:
+    return sorted(REGISTRY)
+
+
+register(Experiment(
+    name="alu_chain",
+    description="per-op latency via chain-length regression, dependent vs "
+                "independent (paper Tables I/II)",
+    grid={"op": _ALU_OPS,
+          "dtype": ("float32", "bfloat16", "int32"),
+          "dependent": (True, False)},
+    quick_grid={"op": ("add", "mul", "fma", "exp"),
+                "dtype": ("float32",),
+                "dependent": (True, False)},
+    constraint=_alu_legal,
+    runner=run_alu_cell,
+    cost_per_cell_s=2.0,
+    tags=("vpu", "latency"),
+))
+
+register(Experiment(
+    name="memory_chase",
+    description="memory-hierarchy pointer chase + streaming bandwidth over "
+                "working-set sizes (paper Table IV / Fig. 2-3)",
+    grid={"access": ("chase", "stream"),
+          "size_kib": (16, 256, 4096, 65536)},
+    quick_grid={"access": ("chase", "stream"),
+                "size_kib": (16, 4096)},
+    runner=run_chase_cell,
+    cost_per_cell_s=3.0,
+    tags=("memory", "latency"),
+))
+
+register(Experiment(
+    name="mxu_shapes",
+    description="matrix-unit latency/throughput per dtype x tile shape "
+                "(paper Table III, the WMMA fragment sweep; int8 measures "
+                "the bf16 path where no s8 dot exists)",
+    grid={"dtype": ("bfloat16", "float32", "int8"),
+          "shape": ((128, 128, 128), (256, 256, 256), (512, 512, 128)),
+          "dependent": (True, False)},
+    quick_grid={"dtype": ("float32",),
+                "shape": ((128, 128, 128),),
+                "dependent": (True, False)},
+    runner=run_mxu_cell,
+    cost_per_cell_s=4.0,
+    tags=("mxu", "throughput"),
+))
+
+register(Experiment(
+    name="roofline_calibration",
+    description="achieved peaks (MXU TFLOP/s, HBM GB/s, dispatch overhead) "
+                "that anchor the roofline/predictor calibration",
+    grid={"term": ("mxu_peak_tflops", "hbm_stream_gbs",
+                   "dispatch_overhead_us")},
+    runner=run_roofline_cal_cell,
+    cost_per_cell_s=5.0,
+    tags=("roofline", "calibration"),
+))
+
+register(Experiment(
+    name="isa_mapping",
+    description="source -> optimized instruction expansion per op class "
+                "(paper Table V, the PTX->SASS map)",
+    grid={"case": ISA_CASES},
+    quick_grid={"case": ("add.f32", "softmax.f32", "matmul.f32", "scan8")},
+    runner=run_isa_cell,
+    cost_per_cell_s=0.5,
+    tags=("isa",),
+))

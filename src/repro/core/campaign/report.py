@@ -1,0 +1,209 @@
+"""Regenerate the paper-style tables from persisted campaign results.
+
+Every function here consumes *only* validated result documents
+(``repro.core.campaign.results``) — no re-measurement — so the published
+tables can be rebuilt from the JSON artifacts alone, on any machine.
+Rows keep the repo's long-standing CSV shape ``name,us_per_call,derived``
+so existing tooling keeps parsing them.
+
+``calibration_from_results`` converts campaign measurements into the
+calibration-table format consumed by ``repro.core.microbench.tables`` and
+``repro.core.perfmodel.predictor`` (the ``vpu`` section prices the
+instruction stream of the perf model), closing the loop: measured tables
+feed the predictor directly.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def _cells(doc: Mapping[str, Any], ok_only: bool = True):
+    for key in sorted(doc["cells"]):
+        rec = doc["cells"][key]
+        if ok_only and rec.get("status", "ok") != "ok":
+            continue
+        yield key, rec["params"], rec["metrics"]
+
+
+def cpi_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Tables I/II from an ``alu_chain`` result file: the chain-length CPI
+    convergence curve plus dependent/independent per-op latency."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        tag = "dep" if p["dependent"] else "ind"
+        name = f"table2/{p['op']}.{p['dtype']}.{tag}"
+        rows.append((name, m["per_op_ns"] / 1e3,
+                     f"overhead_us={m['overhead_ns'] / 1e3:.2f}"))
+        for k in sorted(m.get("cpi_curve", {}), key=int):
+            rows.append((f"table1/{p['op']}.{p['dtype']}.{tag}/K={k}",
+                         m["times_us"][m["lengths"].index(int(k))]
+                         if int(k) in m.get("lengths", []) else 0.0,
+                         f"t(K)/(K*t_inf)={m['cpi_curve'][k]:.2f}"))
+    return rows
+
+
+def mxu_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Table III from an ``mxu_shapes`` result file."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        mm, nn, kk = p["shape"]
+        tag = "dep" if p["dependent"] else "ind"
+        rows.append((f"table3/{p['dtype']}.m{mm}n{nn}k{kk}.{tag}",
+                     m["per_op_us"], f"tflops={m['tflops']:.3f}"))
+    return rows
+
+
+def memory_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Table IV from a ``memory_chase`` result file: chase latency per
+    working-set size plus the contrasting streaming-read bandwidth."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        if p.get("access", "chase") == "stream":
+            rows.append((f"table4/streaming_read_{p['size_kib']}KiB", 0.0,
+                         f"GBps={m['gbps']:.2f}"))
+        else:
+            rows.append((f"table4/chase_{p['size_kib']}KiB",
+                         m["per_hop_ns"] / 1e3,
+                         f"per_hop_ns={m['per_hop_ns']:.1f}"))
+    return rows
+
+
+def isa_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Table V from an ``isa_mapping`` result file."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        top = ",".join(f"{k}x{v}" for k, v in m.get("top_ops", {}).items())
+        rows.append((f"table5/{p['case']}", 0.0,
+                     f"src_ops={m['n_source_ops']};"
+                     f"opt_ops={m['n_optimized_ops']};top={top};"
+                     f"flops={m['flops']}"))
+    return rows
+
+
+def roofline_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Achieved-peak terms from a ``roofline_calibration`` result file."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        rows.append((f"roofline/{p['term']}", 0.0,
+                     f"value={m['value']:.3f};unit={m['unit']};"
+                     f"{m.get('detail', '')}"))
+    return rows
+
+
+_TABLE_FOR = {
+    "alu_chain": cpi_table,
+    "mxu_shapes": mxu_table,
+    "memory_chase": memory_table,
+    "isa_mapping": isa_table,
+    "roofline_calibration": roofline_table,
+}
+
+
+def table_for(doc: Mapping[str, Any]) -> List[Row]:
+    """Dispatch a result document to its paper-table renderer."""
+    exp = doc["experiment"]
+    try:
+        return _TABLE_FOR[exp](doc)
+    except KeyError:
+        raise ValueError(f"no table renderer for experiment {exp!r}; "
+                         f"known: {sorted(_TABLE_FOR)}") from None
+
+
+def render_rows(rows: Iterable[Row], file=None, header: bool = True) -> None:
+    file = file or sys.stdout
+    if header:
+        print("name,us_per_call,derived", file=file)
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}", file=file)
+
+
+def render_result_files(paths, file=None) -> None:
+    """Load + render paper tables from result files alone — the shared body
+    of `campaign report` and `paper_tables.py --from-results`."""
+    from repro.core.campaign.results import load_results
+
+    first = True
+    for path in paths:
+        try:
+            doc = load_results(path)
+            rows = table_for(doc)
+        except (OSError, ValueError) as e:   # ValueError covers bad JSON too
+            raise SystemExit(f"{path}: {e}") from None
+        render_rows(rows, file=file, header=first)
+        first = False
+
+
+# ---------------------------------------------------------------------------
+# calibration-table bridge: campaign results -> perf-model input
+# ---------------------------------------------------------------------------
+
+def calibration_from_results(docs: Mapping[str, Mapping[str, Any]],
+                             clock_hz: Optional[float] = None
+                             ) -> Dict[str, Any]:
+    """Build a calibration table (the ``tables.py`` format) from campaign
+    result documents, keyed by experiment name.
+
+    The ``vpu`` section converts measured per-op latency to CPI at
+    ``clock_hz`` (default 1 GHz when the host clock is unknown) so
+    ``perfmodel.predictor.issue_overhead`` can price instruction streams
+    straight from a measured campaign.
+    """
+    clock = clock_hz or 1e9
+    backend = next((d.get("backend") for d in docs.values()
+                    if d.get("backend")), "unknown")
+    table: Dict[str, Any] = {
+        "schema_version": 1,
+        "hardware": backend,
+        "source": "repro.core.campaign results "
+                  f"({', '.join(sorted(docs))}) at "
+                  f"{time.strftime('%F %T')}",
+        "methodology": "chain-length regression (paper Fig.1/Table I), "
+                       "dependent vs independent (Table II), pointer chase "
+                       "(Fig.2, Table IV), matrix-unit probes (Table III)",
+        "ops": {}, "memory": {}, "mxu": {}, "vpu": {}, "roofline": {},
+    }
+    alu = docs.get("alu_chain")
+    if alu:
+        for _, p, m in _cells(alu):
+            tag = "dep" if p["dependent"] else "ind"
+            table["ops"][f"{p['op']}.{p['dtype']}.{tag}"] = {
+                "per_op_ns": m["per_op_ns"],
+                "overhead_ns": m["overhead_ns"],
+                "cpi_curve": m.get("cpi_curve", {}),
+            }
+            if p["dtype"] == "float32" and p["dependent"]:
+                table["vpu"][f"{p['op']}.f32"] = {
+                    "cpi": m["per_op_ns"] * 1e-9 * clock,
+                    "measured_per_op_ns": m["per_op_ns"],
+                }
+    chase = docs.get("memory_chase")
+    if chase:
+        for _, p, m in _cells(chase):
+            if p.get("access", "chase") == "stream":
+                table.setdefault("memory_streaming", {})[
+                    f"{p['size_kib']}KiB"] = {"gbps": m["gbps"]}
+            else:
+                table["memory"][str(m["working_set_bytes"])] = {
+                    "per_hop_ns": m["per_hop_ns"],
+                    "overhead_ns": m["overhead_ns"],
+                }
+    mxus = docs.get("mxu_shapes")
+    if mxus:
+        for _, p, m in _cells(mxus):
+            mm, nn, kk = p["shape"]
+            tag = "dep" if p["dependent"] else "ind"
+            table["mxu"][f"{p['dtype']}.m{mm}n{nn}k{kk}.{tag}"] = {
+                "per_op_us": m["per_op_us"],
+                "tflops": m["tflops"],
+            }
+    roof = docs.get("roofline_calibration")
+    if roof:
+        for _, p, m in _cells(roof):
+            table["roofline"][p["term"]] = {
+                "value": m["value"], "unit": m["unit"],
+            }
+    return table

@@ -1,15 +1,23 @@
-"""Latency tables: load calibration data, run the microbench suite, persist
-refreshed tables (the paper's deliverable is exactly such a table)."""
+"""Latency tables: load shipped calibrations, run the measurement campaigns,
+persist refreshed tables (the paper's deliverable is exactly such a table).
+
+Measurement is delegated to the campaign runner (``repro.core.campaign``):
+``calibrate`` runs the four calibration experiments through the scheduler —
+so a partially-finished calibration resumes instead of restarting — and
+converts the persisted, schema-versioned results into the calibration-table
+format the perf model (``repro.core.perfmodel.predictor``) consumes.
+"""
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
-from typing import Dict, Optional
-
-import jax
+from typing import Dict, Iterable, Optional
 
 CALIB_DIR = Path(__file__).resolve().parents[2] / "core" / "calibration"
+
+# the experiments whose results make up a calibration table
+CALIBRATION_EXPERIMENTS = ("alu_chain", "memory_chase", "mxu_shapes",
+                           "roofline_calibration")
 
 
 def load_table(name: str) -> Dict:
@@ -17,59 +25,50 @@ def load_table(name: str) -> Dict:
 
 
 def ampere_table() -> Dict:
+    """The paper's own A100 numbers (Tables II-V), shipped with the repo."""
     return load_table("ampere_a100")
 
 
 def v5e_table() -> Dict:
+    """The TPU v5e deployment-target table."""
     return load_table("tpu_v5e")
 
 
-def calibrate(out_path: Optional[Path] = None, quick: bool = True) -> Dict:
-    """Run the full microbench suite on the CURRENT backend and emit a table
+def table_from_results(results_dir: Path | str,
+                       experiments: Iterable[str] = CALIBRATION_EXPERIMENTS,
+                       clock_hz: Optional[float] = None) -> Dict:
+    """Build a calibration table from campaign result files alone — no
+    re-measurement.  This is how measured tables feed the predictor."""
+    from repro.core.campaign import report as campaign_report
+    from repro.core.campaign.results import load_results_dir
+
+    docs = load_results_dir(results_dir, experiments)
+    if not docs:
+        raise FileNotFoundError(
+            f"no campaign results for {tuple(experiments)} in {results_dir}; "
+            "run `python -m repro.core.campaign run all` first")
+    return campaign_report.calibration_from_results(docs, clock_hz=clock_hz)
+
+
+def calibrate(out_path: Optional[Path] = None, quick: bool = True,
+              results_dir: Optional[Path | str] = None) -> Dict:
+    """Run the calibration campaigns on the CURRENT backend and emit a table
     in the calibration format.  On a real TPU this refreshes tpu_v5e.json;
-    on CPU it demonstrates the methodology (documented in the table)."""
-    from repro.core.microbench import harness, memory, mxu
+    on CPU it characterizes the host (the methodology demonstration).
 
-    backend = jax.default_backend()
-    dtypes = ("float32", "int32") if quick else ("float32", "bfloat16",
-                                                 "int32")
-    lengths = (4, 16, 64) if quick else (4, 16, 64, 256)
-    chain = harness.default_suite(dtypes=dtypes, lengths=lengths)
-    chases = memory.hierarchy_sweep(
-        sizes=(16 * 2**10, 4 * 2**20) if quick
-        else (16 * 2**10, 256 * 2**10, 4 * 2**20, 64 * 2**20))
-    mxus = mxu.shape_sweep(
-        dtypes=("float32",) if quick else ("bfloat16", "float32"),
-        shapes=((128, 128, 128), (256, 256, 256)) if quick else None
-        or ((128, 128, 128), (256, 256, 256)))
+    Campaign results persist under ``results_dir`` (default
+    ``results/campaign``); already-measured cells are skipped on rerun, so
+    an interrupted calibration resumes where it stopped.
+    """
+    from repro.core.campaign import report as campaign_report
+    from repro.core.campaign import runner as campaign_runner
+    from repro.core.campaign.results import load_results
 
-    table = {
-        "hardware": backend,
-        "source": f"repro.core.microbench run at {time.strftime('%F %T')}",
-        "methodology": "chain-length regression (paper Fig.1/Table I), "
-                       "dependent vs independent (Table II), pointer chase "
-                       "(Fig.2, Table IV), matrix-unit probes (Table III)",
-        "ops": {
-            f"{r.op}.{r.dtype}.{'dep' if r.dependent else 'ind'}": {
-                "per_op_ns": r.per_op_s * 1e9,
-                "overhead_ns": r.overhead_s * 1e9,
-                "cpi_curve": r.cpi_curve,
-            } for r in chain
-        },
-        "memory": {
-            str(r.working_set_bytes): {
-                "per_hop_ns": r.per_hop_s * 1e9,
-                "overhead_ns": r.overhead_s * 1e9,
-            } for r in chases
-        },
-        "mxu": {
-            f"{r.dtype}.m{r.shape[0]}n{r.shape[1]}k{r.shape[2]}."
-            f"{'dep' if r.dependent else 'ind'}": {
-                "per_op_us": r.per_op_s * 1e6,
-                "tflops": r.tflops,
-            } for r in mxus
-        },
-    }
+    results_dir = Path(results_dir or campaign_runner.DEFAULT_RESULTS_DIR)
+    reports = campaign_runner.run_many(CALIBRATION_EXPERIMENTS,
+                                       out_dir=results_dir, quick=quick)
+    docs = {name: load_results(rep.path) for name, rep in reports.items()}
+    table = campaign_report.calibration_from_results(docs)
     if out_path:
         Path(out_path).write_text(json.dumps(table, indent=1))
     return table

@@ -46,7 +46,8 @@ def train(model: Model, mesh, *, num_steps: int = 50,
     # ----- shardings / step ---------------------------------------------------
     from repro.configs.base import ShapeCell
     cell = ShapeCell("loop", "train", seq_len, global_batch)
-    jax.set_mesh(mesh)
+    if hasattr(jax, "set_mesh"):       # jax>=0.6; shardings below are explicit
+        jax.set_mesh(mesh)
     psh, osh, bsh, shapes, _ = train_shardings(model, optimizer, mesh, cell)
     accum = accum_steps_for(cfg, global_batch, n_batch_shards(mesh))
     step_fn = jax.jit(

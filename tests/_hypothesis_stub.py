@@ -1,0 +1,57 @@
+"""Degraded stand-in for `hypothesis` when the `test` extra isn't installed.
+
+Test modules guard their import like::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:          # degrade: property tests skip, the rest run
+        from _hypothesis_stub import given, settings, st
+
+With the real package absent, every ``@given`` test calls
+``pytest.importorskip("hypothesis")`` at run time — reported as a skip with
+an install hint — while plain unit tests in the same module keep running.
+That turns the seed suite's three collection *errors* into a handful of
+skips (install with ``pip install -e .[test]`` to run everything).
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        # no functools.wraps: __wrapped__ would make pytest resolve the
+        # original (strategy-fed) parameters as fixtures
+        def skipper():
+            pytest.importorskip(
+                "hypothesis",
+                reason="property test needs hypothesis "
+                       "(pip install -e .[test])")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """Inert placeholder so strategy expressions at module scope evaluate."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = strategies = _Strategies()

@@ -1,0 +1,255 @@
+"""Campaign-runner subsystem tests: registry lookup, grid expansion,
+resume-skip scheduling, and round-trip of the schema-versioned result
+format into the report generator and the perf-model calibration bridge."""
+import json
+
+import pytest
+
+from repro.core.campaign import registry, report, runner
+from repro.core.campaign import results as results_mod
+from repro.core.campaign.results import ResultStore, load_results
+from repro.core.campaign.spec import Experiment, cell_key
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_the_paper_campaigns():
+    assert {"alu_chain", "memory_chase", "mxu_shapes",
+            "roofline_calibration", "isa_mapping"} <= set(registry.names())
+
+
+def test_registry_lookup_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="alu_chain"):
+        registry.get("not_an_experiment")
+
+
+def test_registry_cost_estimates_positive():
+    for name in registry.names():
+        exp = registry.get(name)
+        assert exp.estimated_cost_s() > 0
+        assert exp.estimated_cost_s(quick=True) <= exp.estimated_cost_s()
+
+
+# ---------------------------------------------------------------------------
+# grid expansion
+# ---------------------------------------------------------------------------
+
+
+def _toy_experiment(calls=None, fail_on=()):
+    def toy_runner(params, quick=False):
+        if calls is not None:
+            calls.append(dict(params))
+        if params["op"] in fail_on:
+            raise RuntimeError(f"boom on {params['op']}")
+        return {"latency_ns": 10.0 * params["k"], "op": params["op"]}
+
+    return Experiment(
+        name="toy", description="test-only",
+        grid={"op": ("add", "mul", "div"), "k": (1, 2)},
+        quick_grid={"op": ("add",), "k": (1,)},
+        constraint=lambda p: not (p["op"] == "div" and p["k"] == 2),
+        runner=toy_runner)
+
+
+def test_grid_expansion_counts_and_constraint():
+    exp = _toy_experiment()
+    cells = exp.cells()
+    assert len(cells) == 5                     # 3*2 minus the (div,2) combo
+    assert all(c.params != {"op": "div", "k": 2} for c in cells)
+    assert len(exp.cells(quick=True)) == 1
+
+
+def test_cell_keys_deterministic_and_order_independent():
+    assert cell_key({"b": 2, "a": True}) == cell_key({"a": True, "b": 2})
+    assert cell_key({"a": True, "shape": (128, 64)}) == "a=true,shape=128x64"
+    exp = _toy_experiment()
+    keys = [c.key for c in exp.cells()]
+    assert len(keys) == len(set(keys))
+
+
+def test_alu_grid_respects_dtype_legality():
+    exp = registry.get("alu_chain")
+    for cell in exp.cells():
+        p = cell.params
+        if p["dtype"] == "int32":
+            assert p["op"] not in {"exp", "div", "rsqrt", "fma"}
+        else:
+            assert p["op"] not in {"and", "xor", "popc", "clz"}
+
+
+# ---------------------------------------------------------------------------
+# scheduler: resume-skip, force, error isolation
+# ---------------------------------------------------------------------------
+
+
+def test_run_then_rerun_skips_completed_cells(tmp_path):
+    calls = []
+    exp = _toy_experiment(calls)
+    rep1 = runner.run(exp, out_dir=tmp_path, backend="cpu")
+    assert (rep1.ran, rep1.skipped, rep1.failed) == (5, 0, 0)
+    assert rep1.path.exists()
+
+    rep2 = runner.run(exp, out_dir=tmp_path, backend="cpu")
+    assert (rep2.ran, rep2.skipped) == (0, 5)
+    assert len(calls) == 5                     # runner never re-invoked
+
+    rep3 = runner.run(exp, out_dir=tmp_path, backend="cpu", force=True)
+    assert rep3.ran == 5 and len(calls) == 10
+
+
+def test_failed_cells_recorded_and_retried(tmp_path):
+    exp = _toy_experiment(fail_on=("mul",))
+    rep = runner.run(exp, out_dir=tmp_path, backend="cpu")
+    assert rep.failed == 2 and rep.ran == 3    # campaign survived the errors
+    doc = load_results(rep.path)
+    errs = [r for r in doc["cells"].values() if r["status"] == "error"]
+    assert len(errs) == 2 and "boom" in errs[0]["error"]
+
+    # a rerun retries ONLY the failed cells
+    ok = _toy_experiment()
+    rep2 = runner.run(ok, out_dir=tmp_path, backend="cpu")
+    assert (rep2.ran, rep2.skipped, rep2.failed) == (2, 3, 0)
+
+
+def test_full_run_does_not_reuse_quick_measurements(tmp_path):
+    calls = []
+    exp = _toy_experiment(calls)
+    runner.run(exp, out_dir=tmp_path, backend="cpu", quick=True)
+    assert len(calls) == 1                     # quick grid is 1 cell
+
+    # full run must re-measure the quick cell (shorter sweeps don't count)
+    rep = runner.run(exp, out_dir=tmp_path, backend="cpu", quick=False)
+    assert (rep.ran, rep.skipped) == (5, 0)
+    doc = load_results(rep.path)
+    assert doc["quick"] is False
+    assert all(not r["quick"] for r in doc["cells"].values())
+
+    # ...but a quick run happily reuses full-sweep measurements
+    rep2 = runner.run(exp, out_dir=tmp_path, backend="cpu", quick=True)
+    assert (rep2.ran, rep2.skipped) == (0, 1)
+
+
+def test_backend_mismatch_refuses_to_mix(tmp_path):
+    exp = _toy_experiment()
+    runner.run(exp, out_dir=tmp_path, backend="cpu")
+    with pytest.raises(RuntimeError, match="mixing backends"):
+        runner.run(exp, out_dir=tmp_path, backend="tpu")
+    # force re-measures everything and relabels the file
+    rep = runner.run(exp, out_dir=tmp_path, backend="tpu", force=True)
+    assert rep.ran == 5
+    assert load_results(rep.path)["backend"] == "tpu"
+
+
+def test_run_filter_restricts_grid(tmp_path):
+    exp = _toy_experiment()
+    rep = runner.run(exp, out_dir=tmp_path, backend="cpu",
+                     only={"op": "add"})
+    assert rep.total_cells == 2 and rep.ran == 2
+
+
+def test_backend_requirement_enforced(tmp_path):
+    exp = Experiment(name="tpu_only", description="", grid={"x": (1,)},
+                     runner=lambda p, quick=False: {}, backends=("tpu",))
+    with pytest.raises(RuntimeError, match="requires"):
+        runner.run(exp, out_dir=tmp_path, backend="cpu")
+
+
+# ---------------------------------------------------------------------------
+# result schema round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_result_schema_round_trip(tmp_path):
+    path = tmp_path / "toy.json"
+    store = ResultStore(path, "toy", backend="cpu", quick=True)
+    store.record("k=1,op=add", {"op": "add", "k": 1},
+                 {"latency_ns": 12.5, "curve": {"4": 1.0}}, elapsed_s=0.01,
+                 quick=True)
+
+    doc = load_results(path)
+    assert doc["schema_version"] == results_mod.SCHEMA_VERSION
+    assert doc["experiment"] == "toy" and doc["quick"] is True
+    rec = doc["cells"]["k=1,op=add"]
+    assert rec["params"] == {"op": "add", "k": 1}
+    assert rec["metrics"]["latency_ns"] == 12.5
+
+    # reopening the store resumes from the persisted state
+    store2 = ResultStore(path, "toy")
+    assert store2.completed == {"k=1,op=add"}
+
+    csv_path = store2.write_csv()
+    header, row = csv_path.read_text().strip().splitlines()
+    assert header.startswith("experiment,cell,status,")
+    assert "latency_ns" in header and "12.5" in row
+
+
+def test_result_schema_rejects_newer_and_mismatched(tmp_path):
+    path = tmp_path / "toy.json"
+    path.write_text(json.dumps({"schema_version": 99, "experiment": "toy",
+                                "cells": {}}))
+    with pytest.raises(ValueError, match="newer"):
+        load_results(path)
+
+    path.write_text(json.dumps(
+        results_mod.new_document("other", "cpu", False)))
+    with pytest.raises(ValueError, match="other"):
+        ResultStore(path, "toy")
+
+
+def test_v0_document_migrates_forward(tmp_path):
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"experiment": "toy", "hardware": "cpu",
+                                "ops": {"add": {}}}))
+    doc = load_results(path)
+    assert doc["schema_version"] == results_mod.SCHEMA_VERSION
+    assert doc["cells"] == {}                  # unversioned cells re-measure
+
+
+# ---------------------------------------------------------------------------
+# report generation + calibration bridge (from files alone)
+# ---------------------------------------------------------------------------
+
+
+def _fake_alu_doc():
+    doc = results_mod.new_document("alu_chain", "cpu", True)
+    doc["cells"]["dependent=true,dtype=float32,op=add"] = {
+        "params": {"op": "add", "dtype": "float32", "dependent": True},
+        "metrics": {"per_op_ns": 1000.0, "overhead_ns": 50.0,
+                    "lengths": [4, 16], "times_us": [4.2, 16.4],
+                    "cpi_curve": {"4": 1.05, "16": 1.0}},
+        "status": "ok", "elapsed_s": 0.1,
+    }
+    return doc
+
+
+def test_cpi_table_regenerated_from_result_doc():
+    rows = report.table_for(_fake_alu_doc())
+    names = [r[0] for r in rows]
+    assert "table2/add.float32.dep" in names
+    assert "table1/add.float32.dep/K=4" in names
+    t2 = dict((r[0], r) for r in rows)["table2/add.float32.dep"]
+    assert t2[1] == pytest.approx(1.0)         # 1000 ns -> 1 us per call
+
+
+def test_calibration_from_results_feeds_predictor():
+    from repro.core.perfmodel import predictor
+    from repro.core.perfmodel.hardware import TPU_V5E
+
+    table = report.calibration_from_results({"alu_chain": _fake_alu_doc()},
+                                            clock_hz=1e9)
+    assert table["vpu"]["add.f32"]["cpi"] == pytest.approx(1000.0)
+    overhead = predictor.issue_overhead({"add": 100.0}, table)
+    assert overhead == pytest.approx(100 * 1000.0 / TPU_V5E.clock_hz)
+
+
+def test_table_from_results_loads_dir(tmp_path):
+    from repro.core.microbench import tables
+
+    doc = _fake_alu_doc()
+    (tmp_path / "alu_chain.json").write_text(json.dumps(doc))
+    table = tables.table_from_results(tmp_path, experiments=("alu_chain",))
+    assert "add.float32.dep" in table["ops"]
+    with pytest.raises(FileNotFoundError):
+        tables.table_from_results(tmp_path / "empty")

@@ -2,7 +2,11 @@
 the methodology invariants from the paper must hold structurally."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.microbench import harness, memory
 
@@ -16,6 +20,7 @@ def test_fit_latency_recovers_synthetic_line():
     np.testing.assert_allclose(b, b_true, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_chain_result_cpi_curve_converges():
     """The paper's Table I shape: t(K)/(K*t_inf) falls toward 1 as K grows."""
     r = harness.run_chain(harness.OPS["add"], "add",
@@ -25,6 +30,7 @@ def test_chain_result_cpi_curve_converges():
     assert 0.5 < curve[-1] < 2.0
 
 
+@pytest.mark.slow
 def test_dependent_not_faster_than_independent_for_heavy_op():
     dep = harness.run_chain(harness.OPS["exp"], "exp", lengths=(8, 32, 128),
                             dependent=True)

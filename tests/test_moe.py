@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
 
 from repro.configs import ARCHS, reduced
 from repro.models.layers import moe as M
