@@ -55,6 +55,14 @@ def from_results(paths) -> None:
     report.render_result_files(paths)
 
 
+def prediction_error(calibration: str) -> None:
+    """The cost-model validation table: predict a calibration's rows back
+    through the layer stack (``repro.core.costmodel``) and print errors."""
+    from repro.core.costmodel.calibration import load_calibration
+    cal = load_calibration(calibration)
+    report.render_rows(report.prediction_error_table(cal, name=cal.name))
+
+
 def main(argv=None) -> int:
     import signal
     if hasattr(signal, "SIGPIPE"):   # die quietly when piped into `grep -q`
@@ -63,12 +71,19 @@ def main(argv=None) -> int:
     p.add_argument("--from-results", nargs="+", metavar="RESULT_JSON",
                    help="regenerate tables from these campaign result files "
                         "without running anything")
+    p.add_argument("--prediction-error", metavar="CALIBRATION",
+                   help="print the cost-model validation table for this "
+                        "calibration (shipped name, JSON path, or campaign "
+                        "results dir) instead of running campaigns")
     p.add_argument("--quick", action="store_true", default=True,
                    help="reduced grids (default on; use --full to override)")
     p.add_argument("--full", dest="quick", action="store_false")
     p.add_argument("--results-dir", default=str(runner.DEFAULT_RESULTS_DIR))
     args = p.parse_args(argv)
 
+    if args.prediction_error:
+        prediction_error(args.prediction_error)
+        return 0
     if args.from_results:
         from_results(args.from_results)
         return 0

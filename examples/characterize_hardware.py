@@ -1,12 +1,19 @@
 """Reproduce the paper's experiment suite on the current backend via the
-campaign runner: per-op latency tables (dependent/independent), the
-memory-hierarchy chase, matrix-unit probes and the roofline peaks; then
-diff the result against the shipped calibrations.
+campaign runner, then feed the measured table straight into the unified
+cost model — the paper-as-a-tool, end to end:
 
-This is the paper-as-a-tool: on a real TPU the emitted table refreshes
-repro/core/calibration/tpu_v5e.json; on CPU it characterizes the host.
-Campaign results persist under results/campaign/ — interrupting and
-rerunning this script resumes instead of restarting.
+  1. run the calibration campaigns (resumable; results persist under
+     results/campaign/),
+  2. normalize the measured table into the three cost-model layers
+     (instruction / memory / MXU) and print them,
+  3. validate: round-trip every measured row through the layers
+     (the prediction-error table; must stay ~0%),
+  4. price a real compiled module on THIS host's numbers vs the shipped
+     calibrations (the close-the-loop step the follow-on dissection papers
+     run against their analytical models).
+
+On a real TPU the emitted table refreshes repro/core/calibration/
+tpu_v5e.json; on CPU it characterizes the host.
 
 Run:  PYTHONPATH=src python examples/characterize_hardware.py [--full]
 """
@@ -16,7 +23,9 @@ import pathlib
 
 import jax
 
-from repro.core.microbench.tables import ampere_table, calibrate, v5e_table
+from repro.core.costmodel import (CostModel, prediction_error_rows,
+                                  prediction_error_summary, save_calibration)
+from repro.core.microbench.tables import calibrate
 
 
 def main(argv=None):
@@ -29,39 +38,51 @@ def main(argv=None):
     print(f"backend: {jax.default_backend()}")
     table = calibrate(quick=not args.full, results_dir=args.results_dir)
 
-    print("\n== per-op latency (ns, steady state) ==")
-    for k, v in sorted(table["ops"].items()):
-        if k.endswith(".dep") or k.endswith(".ind"):
-            print(f"  {k:28s} {v['per_op_ns']:10.2f}  "
-                  f"(overhead {v['overhead_ns']:.0f}ns)")
+    # ---- 2. the measured table, as cost-model layers -------------------------
+    host = CostModel.from_table(table, name="host")
+    print("\n== instruction layer (measured cycles @ "
+          f"{host.cal.clock_hz / 1e6:.0f} MHz assumed clock) ==")
+    for key, e in sorted(host.cal.instructions.items()):
+        print(f"  {key:16s} dep={e.dependent_cycles:10.1f}  "
+              f"ind={e.independent_cycles:10.1f}")
+    print("\n== memory layer ==")
+    for lvl in host.memory.levels:
+        print(f"  {lvl.name:12s} <= {int(lvl.capacity_bytes) // 1024:8d} KiB"
+              f"   {lvl.latency_ns:10.1f} ns/access")
+    print(f"  streaming bandwidth {host.memory.bandwidth_bps / 1e9:10.2f} GB/s")
+    print("\n== mxu layer ==")
+    for (dt, shape, dep), p in sorted(host.mxu.points.items(),
+                                      key=lambda kv: str(kv[0])):
+        tag = "dep" if dep else "ind"
+        print(f"  {dt:6s} {str(shape):18s} {tag}  "
+              f"{p.flops_per_s / 1e12:8.3f} TFLOP/s")
 
-    print("\n== memory hierarchy (pointer chase, ns/hop) ==")
-    for size, v in table["memory"].items():
-        print(f"  {int(size)//1024:8d} KiB   {v['per_hop_ns']:8.1f}")
-    for size, v in table.get("memory_streaming", {}).items():
-        print(f"  {size:>8s} streaming read   {v['gbps']:8.2f} GB/s")
+    # ---- 3. validate: measured rows round-trip through the layers ------------
+    errs = prediction_error_rows(host)
+    s = prediction_error_summary(errs)
+    print(f"\n== prediction-error fixture ==\n  {s['rows']} rows, "
+          f"max {s['max_err_pct']:.2f}% / mean {s['mean_err_pct']:.2f}% "
+          "(measured table vs its own layers)")
 
-    print("\n== matrix unit ==")
-    for k, v in table["mxu"].items():
-        print(f"  {k:32s} {v['per_op_us']:8.2f}us  {v['tflops']:8.3f} TFLOP/s")
+    # ---- 4. price one real compiled module, host vs shipped ------------------
+    x = jax.numpy.ones((256, 256), jax.numpy.float32)
+    fn = jax.jit(lambda v: jax.nn.softmax(v @ v.T, axis=-1))
+    models = {"host(measured)": host,
+              "tpu_v5e": CostModel.from_named("tpu_v5e"),
+              "ampere_a100": CostModel.from_named("ampere_a100")}
+    print("\n== one compiled softmax(x@x.T) step under each calibration ==")
+    for name, m in models.items():
+        pred = m.predict_fn(fn, x, dtype="f32")
+        print(f"  {name:16s} {pred.summary()}")
 
-    print("\n== roofline peaks (measured) ==")
-    for k, v in table["roofline"].items():
-        print(f"  {k:24s} {v['value']:10.3f} {v['unit']}")
-
-    print("\n== reference tables shipped with the repo ==")
-    a100 = ampere_table()
-    print(f"  ampere_a100: {len(a100['instructions'])} instruction rows, "
-          f"{len(a100['tensor_core'])} tensor-core rows "
-          f"(the paper's Tables II-V)")
-    v5e = v5e_table()
-    print(f"  tpu_v5e: {len(v5e['vpu'])} VPU rows, "
-          f"MXU bf16 peak {v5e['mxu']['bf16.f32']['peak_tflops']} TFLOP/s")
-
-    out = pathlib.Path("results/host_calibration.json")
+    out_dir = pathlib.Path("results")
+    out = out_dir / "host_calibration.json"
     out.parent.mkdir(exist_ok=True)
     out.write_text(json.dumps(table, indent=1))
-    print(f"\nwrote {out} (campaign cells in {args.results_dir}/)")
+    canonical = save_calibration(host.cal,
+                                 out_dir / "costmodel" / "host_canonical.json")
+    print(f"\nwrote {out} (campaign cells in {args.results_dir}/) and "
+          f"{canonical} (canonical cost-model format)")
 
 
 if __name__ == "__main__":

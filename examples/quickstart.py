@@ -13,10 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.core.costmodel import CostModel
 from repro.core.isa import hlo_census
 from repro.core.microbench import harness
-from repro.core.microbench.tables import v5e_table
-from repro.core.perfmodel import predictor
 from repro.models.zoo import build_model
 from repro.serve.engine import ServingEngine
 from repro.train.optim import make_optimizer
@@ -54,11 +53,12 @@ stats = eng.run_until_done()
 print(f"[4] served {stats.completed} requests, "
       f"{stats.decoded_tokens} tokens in {stats.steps} engine steps")
 
-# ---- 5. instruction census + perf model --------------------------------------
+# ---- 5. instruction census + cost model --------------------------------------
 lowered = jax.jit(model.loss).lower(params, batch)
 census = hlo_census.census(lowered.compile().as_text())
-pred = predictor.predict(census, mem_bytes_analytic=1e6, table=v5e_table())
+pred = CostModel.from_named("tpu_v5e").predict(census, mem_bytes=1e6)
 print(f"[5] census: {census['flops']:.2e} FLOPs, "
       f"{len(census['op_histogram'])} op kinds; "
-      f"modelled step {pred.step_s*1e6:.1f}us ({pred.bottleneck}-bound)")
+      f"modelled step {pred.step_s*1e6:.1f}us ({pred.bottleneck}-bound, "
+      f"{pred.defaulted_op_count:.0f} ops defaulted)")
 print("quickstart OK")

@@ -1,5 +1,7 @@
-"""Batched serving example: continuous batching through the engine, with
-latency/throughput accounting per request.
+"""Batched serving example: continuous batching through the engine with
+cost-model-gated admission — predicted decode-step latency decides how many
+prefills pack into each engine iteration — plus latency/throughput
+accounting per request.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -9,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.core.costmodel import CostModel
 from repro.models.zoo import build_model
 from repro.serve.engine import ServingEngine
 
@@ -18,7 +21,11 @@ def main():
                   n_kv_heads=1, head_dim=32, d_ff=256, vocab_size=512)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, max_batch=4, max_len=96)
+    cm = CostModel.from_named("tpu_v5e")
+    # a tight budget: admissions beyond the first per step defer until the
+    # predicted iteration time (decode + prefills) fits again
+    eng = ServingEngine(model, params, max_batch=4, max_len=96,
+                        cost_model=cm, step_budget_s=5e-5)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -33,7 +40,12 @@ def main():
     print(f"completed {stats.completed} requests / "
           f"{stats.decoded_tokens} tokens in {dt:.2f}s "
           f"({stats.decoded_tokens/dt:.1f} tok/s, "
-          f"{stats.steps} decode steps, {stats.prefills} prefills)")
+          f"{stats.steps} decode steps, {stats.prefills} prefills, "
+          f"{stats.deferred_prefills} admissions deferred)")
+    if stats.predicted_step_s:
+        print(f"  predicted step time: {min(stats.predicted_step_s):.2e}-"
+              f"{max(stats.predicted_step_s):.2e}s "
+              f"(measured median {np.median(stats.measured_step_s):.2e}s)")
     for rid in rids[:3]:
         r = eng.done[rid]
         print(f"  req {rid}: prompt[{len(r.prompt)}] -> {r.tokens}")

@@ -9,9 +9,11 @@ import tempfile
 
 import numpy as np
 
-from repro.configs import ARCHS, reduced
+from repro.configs import ARCHS, SHAPE_CELLS, reduced
+from repro.core.costmodel import CostModel
 from repro.launch.mesh import make_host_mesh
 from repro.models.zoo import build_model
+from repro.sharding.plans import rank_plans
 from repro.train.loop import train
 
 
@@ -33,14 +35,27 @@ def main():
                       n_kv_heads=2, head_dim=32, d_ff=512, vocab_size=512)
     model = build_model(cfg)
     mesh = make_host_mesh()
+    cost_model = CostModel.from_named("tpu_v5e")
+
+    # what mesh WOULD the cost model pick at production scale for this arch?
+    plans = rank_plans(base, SHAPE_CELLS["train_4k"], n_devices=256,
+                       cost_model=cost_model)
+    print(f"cost-model mesh ranking for {base.name} @ 256 chips "
+          f"(best first):")
+    for p in plans[:3]:
+        print(f"  {p.describe()}")
 
     with tempfile.TemporaryDirectory() as ckpt:
-        # phase 1: train halfway, checkpointing
+        # phase 1: train halfway, checkpointing (predicted-vs-measured step
+        # time rides along in the metrics via the cost model)
         half = args.steps // 2
         r1 = train(model, mesh, num_steps=half, global_batch=8, seq_len=64,
                    ckpt_dir=ckpt, ckpt_every=max(half // 2, 1), lr=3e-3,
-                   hooks=[lambda s, m: print(f"step {s:4d} loss "
-                                             f"{float(m['loss']):.3f}")
+                   cost_model=cost_model,
+                   hooks=[lambda s, m: print(
+                       f"step {s:4d} loss {float(m['loss']):.3f} "
+                       f"measured {m['measured_step_s']:.3f}s "
+                       f"(predicted {m['predicted_step_s']:.2e}s on v5e)")
                           if s % 20 == 0 else None])
         # phase 2: "crash" and resume from the checkpoint
         print(f"--- simulated failure; restarting from checkpoint ---")

@@ -1,2 +1,2 @@
-from repro.core import isa, microbench, perfmodel  # noqa
+from repro.core import costmodel, isa, microbench, perfmodel  # noqa
 from repro.core import campaign  # noqa  (last: depends on the above)

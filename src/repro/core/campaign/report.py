@@ -8,9 +8,9 @@ so existing tooling keeps parsing them.
 
 ``calibration_from_results`` converts campaign measurements into the
 calibration-table format consumed by ``repro.core.microbench.tables`` and
-``repro.core.perfmodel.predictor`` (the ``vpu`` section prices the
-instruction stream of the perf model), closing the loop: measured tables
-feed the predictor directly.
+``repro.core.costmodel`` (whose loaders normalize it into the instruction/
+memory/MXU layers), closing the loop: measured tables feed the cost model
+directly.  ``prediction_error_table`` is the validation half of that loop.
 """
 from __future__ import annotations
 
@@ -138,6 +138,40 @@ def render_result_files(paths, file=None) -> None:
 
 
 # ---------------------------------------------------------------------------
+# prediction-error table: validate the cost model against a calibration
+# ---------------------------------------------------------------------------
+
+def prediction_error_table(table: Mapping[str, Any],
+                           name: str = "") -> List[Row]:
+    """The model-validation table: every row of a calibration (the paper's
+    published A100 numbers, the v5e target table, or a measured campaign
+    table) predicted back through the three cost-model layers, with the
+    relative error.  A summary row carries max/mean error — the fixture CI
+    asserts stays within 10%.  ``table`` may be a raw table dict or an
+    already-normalized ``Calibration``."""
+    from repro.core.costmodel.calibration import Calibration
+    from repro.core.costmodel.model import (CostModel,
+                                            prediction_error_rows,
+                                            prediction_error_summary)
+    if isinstance(table, Calibration):
+        model = CostModel(table)
+    else:
+        model = CostModel.from_table(dict(table), name=name)
+    err_rows = prediction_error_rows(model)
+    rows: List[Row] = []
+    for r in err_rows:
+        rows.append((f"prederr/{r['name']}", 0.0,
+                     f"predicted={r['predicted']:.6g};"
+                     f"recorded={r['recorded']:.6g};unit={r['unit']};"
+                     f"err_pct={r['err_pct']:.2f}"))
+    s = prediction_error_summary(err_rows)
+    rows.append(("prederr/summary", 0.0,
+                 f"rows={s['rows']};max_err_pct={s['max_err_pct']:.2f};"
+                 f"mean_err_pct={s['mean_err_pct']:.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # calibration-table bridge: campaign results -> perf-model input
 # ---------------------------------------------------------------------------
 
@@ -148,9 +182,9 @@ def calibration_from_results(docs: Mapping[str, Mapping[str, Any]],
     result documents, keyed by experiment name.
 
     The ``vpu`` section converts measured per-op latency to CPI at
-    ``clock_hz`` (default 1 GHz when the host clock is unknown) so
-    ``perfmodel.predictor.issue_overhead`` can price instruction streams
-    straight from a measured campaign.
+    ``clock_hz`` (default 1 GHz when the host clock is unknown) so the
+    cost model's instruction layer can price instruction streams straight
+    from a measured campaign.
     """
     clock = clock_hz or 1e9
     backend = next((d.get("backend") for d in docs.values()

@@ -1,0 +1,23 @@
+"""Unified cost-model subsystem: the paper's measured tables, operational.
+
+Three explicit layers — instruction (per-op CPI, dependent/independent),
+memory (hierarchy latencies + streaming bandwidth), MXU (shape/dtype
+throughput surface) — normalized from any calibration source
+(``calibration``), composed by :class:`CostModel` (``model``) behind one
+``predict(census, spec)`` API, with analytic census/byte stand-ins for
+never-compiled candidates (``analytic``, imported lazily — it needs jax).
+
+CLI: ``python -m repro.core.costmodel --calibration ampere_a100 --demo``.
+"""
+from repro.core.costmodel.calibration import (CALIB_DIR, Calibration,  # noqa: F401
+                                              InstructionEntry, MemoryLevel,
+                                              MXUPoint, load_calibration)
+from repro.core.costmodel.instruction import (HLO_TO_TABLE,  # noqa: F401
+                                              InstructionLayer, IssueCost)
+from repro.core.costmodel.memory import MemoryLayer  # noqa: F401
+from repro.core.costmodel.model import (CostModel, Prediction,  # noqa: F401
+                                        prediction_error_rows,
+                                        prediction_error_summary,
+                                        save_calibration,
+                                        validate_against_paper)
+from repro.core.costmodel.mxu import MXULayer  # noqa: F401

@@ -1,0 +1,144 @@
+"""Analytic (first-principles) census/byte models for steps that were never
+compiled — the inputs plan ranking and the dry-run roofline feed into
+``CostModel.predict`` when no HLO text exists for a candidate.
+
+The byte models moved here from ``perfmodel.roofline`` (which now imports
+them back for compatibility) and gained an explicit ``n_model`` parameter so
+sharding-plan candidates with different model-parallel widths price
+differently instead of assuming the production 16-way split.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.models.zoo import count_active_params, count_params
+
+
+def _param_bytes(cfg) -> int:
+    return count_params(cfg) * 4          # f32 master weights
+
+
+def cache_bytes(cfg, cell) -> float:
+    """Decode-state bytes for one shape cell (KV / SSM / RWKV / MLA)."""
+    B, S, L = cell.global_batch, cell.seq_len, cfg.n_layers
+    if cfg.rwkv:
+        H = cfg.d_model // cfg.rwkv.head_dim
+        return L * B * (H * cfg.rwkv.head_dim ** 2 * 4 + 2 * cfg.d_model * 2)
+    if cfg.mla:
+        return L * B * S * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+    kv = L * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if cfg.ssm:   # hybrid: + per-layer ssm state
+        kv += L * B * cfg.d_model * cfg.ssm.state_dim * 4
+    if cfg.encdec:
+        kv = cfg.encdec.n_dec_layers * B * S * cfg.n_kv_heads \
+            * cfg.head_dim * 2 * 2 * 2   # self + cross
+    return kv
+
+
+def analytic_train_bytes(cfg, cell, n_devices: int, accum: int,
+                         n_model: int = 16) -> float:
+    """Per-device HBM bytes for one train step (lower-bound model)."""
+    P = _param_bytes(cfg)
+    n_model = max(min(n_model, n_devices), 1)
+    n_data = max(n_devices // n_model, 1)
+    P_dev = P / n_devices                 # FSDP+TP fully sharded storage
+    P_stream = P / n_model                # gathered weights a device consumes
+    tokens_dev = cell.global_batch * cell.seq_len / n_data
+    d = cfg.d_model
+    L = cfg.n_layers
+    # forward + recompute + backward each stream the (gathered) weights once,
+    # in bf16 compute copies (half the f32 master bytes)
+    weights = 3 * accum * P_stream * 0.5
+    # gradient accumulation buffer read+write per microstep (f32, sharded)
+    grads = 2 * accum * (P / n_devices) * 4 / 4
+    # optimizer: read p,m,v + write p,m,v (f32, sharded)
+    opt = 6 * P_dev
+    # activation checkpoints: write fwd, read bwd (bf16) - one carry per layer
+    acts = 2 * L * tokens_dev * d * 2
+    # logits written+read in f32 (vocab sharded over model axis)
+    logits = 2 * tokens_dev * cfg.vocab_size / n_model * 4
+    return weights + grads + opt + acts + logits
+
+
+def analytic_serve_bytes(cfg, cell, n_devices: int,
+                         n_model: int = 16) -> float:
+    """Per-device HBM bytes for one serve step (prefill or decode)."""
+    P = _param_bytes(cfg)
+    n_model = max(min(n_model, n_devices), 1)
+    P_stream = P / n_model * 2 / 4        # bf16 weights, TP sharded
+    if cfg.moe and cell.kind == "decode":
+        # decode touches only active experts' weights
+        act_frac = count_active_params(cfg) / count_params(cfg)
+        P_stream *= act_frac
+    if cell.kind == "prefill":
+        n_data = max(n_devices // n_model, 1)
+        tokens_dev = cell.global_batch * cell.seq_len / n_data
+        d = cfg.d_model
+        acts = 2 * cfg.n_layers * tokens_dev * d * 2
+        cache = cache_bytes(cfg, cell) / n_devices
+        return P_stream + acts + cache
+    # decode: read the whole cache + stream weights once
+    cache = 2 * cache_bytes(cfg, cell) / n_devices
+    return P_stream + cache
+
+
+def analytic_step_bytes(cfg, cell, n_devices: int, accum: int = 1,
+                        n_model: int = 16) -> float:
+    if cell.kind == "train":
+        return analytic_train_bytes(cfg, cell, n_devices, accum, n_model)
+    return analytic_serve_bytes(cfg, cell, n_devices, n_model)
+
+
+# rough top-level-op count per transformer layer in an optimized module
+# (fusion-dominated; anchors the issue-overhead term of analytic censuses)
+_OPS_PER_LAYER = {"fusion": 30.0, "dot": 6.0, "dynamic-update-slice": 2.0,
+                  "transpose": 2.0, "reshape": 4.0, "copy": 1.0}
+
+
+def analytic_census(cfg, cell, n_devices: int, n_model: int = 16,
+                    accum: int = 1) -> Dict[str, Any]:
+    """A census-shaped dict (flops / hbm_bytes / collective bytes /
+    op_histogram) for a candidate sharding plan, from first principles.
+
+    Collective model (ring algorithms over the batch/model axes):
+      * FSDP weight gather fwd+bwd plus gradient reduce-scatter over the
+        data axis: 3 x (P/n_model) bf16 bytes x (d-1)/d;
+      * TP activation combines over the model axis: 2 collectives/layer of
+        per-device token activations x (m-1)/m.
+    """
+    n_model = max(min(n_model, n_devices), 1)
+    n_data = max(n_devices // n_model, 1)
+    P = count_params(cfg)
+    P_active = count_active_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    tokens_dev = tokens / n_data
+    if cell.kind == "train":
+        flops_global = 6.0 * P_active * tokens * accum
+    else:
+        flops_global = 2.0 * P_active * tokens
+    flops_dev = flops_global / n_devices
+
+    wire = 0.0
+    if n_data > 1:
+        gathers = 3 if cell.kind == "train" else 1
+        wire += gathers * (P * 2 / n_model) * (n_data - 1) / n_data
+    if n_model > 1:
+        passes = 3 * accum if cell.kind == "train" else 1
+        wire += passes * 2 * cfg.n_layers * tokens_dev * cfg.d_model * 2 \
+            * (n_model - 1) / n_model
+
+    layers_weight = cfg.n_layers * (accum * 3 if cell.kind == "train" else 1)
+    hist = {k: v * layers_weight for k, v in _OPS_PER_LAYER.items()}
+    if n_data > 1 or n_model > 1:
+        hist["all-reduce"] = 2.0 * cfg.n_layers
+        hist["all-gather"] = float(cfg.n_layers)
+
+    return {
+        "flops": flops_dev,
+        "hbm_bytes": analytic_step_bytes(cfg, cell, n_devices, accum,
+                                         n_model),
+        "collective_bytes_total": wire,
+        "op_histogram": hist,
+        "model_flops_global": flops_global,
+    }

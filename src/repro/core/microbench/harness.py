@@ -27,8 +27,9 @@ import numpy as np
 def time_fn(fn, *args, iters: int = 30, warmup: int = 5) -> float:
     """Median wall-time of fn(*args) in seconds (jit-compiled outside)."""
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        # block INSIDE the loop: async dispatch would otherwise queue all
+        # warmup work and bill it to the first timed iteration
+        jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()

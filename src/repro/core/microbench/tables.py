@@ -5,7 +5,8 @@ Measurement is delegated to the campaign runner (``repro.core.campaign``):
 ``calibrate`` runs the four calibration experiments through the scheduler —
 so a partially-finished calibration resumes instead of restarting — and
 converts the persisted, schema-versioned results into the calibration-table
-format the perf model (``repro.core.perfmodel.predictor``) consumes.
+format the cost model (``repro.core.costmodel``) consumes; its loaders
+normalize any of these tables into the instruction/memory/MXU layers.
 """
 from __future__ import annotations
 

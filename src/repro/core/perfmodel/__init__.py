@@ -1,1 +1,21 @@
-from repro.core.perfmodel import hardware, predictor, roofline  # noqa
+"""Hardware specs + legacy predictor/roofline shims.
+
+``predictor`` and ``roofline`` now delegate to ``repro.core.costmodel`` and
+are loaded lazily (PEP 562) so the costmodel <-> perfmodel.hardware import
+graph stays acyclic.
+"""
+import importlib
+
+from repro.core.perfmodel import hardware  # noqa: F401
+
+_LAZY = ("predictor", "roofline")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return importlib.import_module(f"repro.core.perfmodel.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,103 +1,47 @@
-"""Latency-table-driven performance prediction (the PPT-GPU analogue).
+"""COMPAT SHIM over ``repro.core.costmodel`` — the prediction stack moved.
 
-The paper's motivation: simulators predict kernel time from per-instruction
-latency tables.  Here, given (a) an instruction census of a compiled module
-(`repro.core.isa.hlo_census`) and (b) a hardware latency table
-(`repro.core.calibration/*.json`), predict the per-device step time as
+The table-driven predictor now lives in ``repro.core.costmodel``: a
+normalized calibration (``Calibration.from_dict`` accepts the raw table
+dicts this module used to take) feeding three explicit layers behind
+``CostModel.predict``.  This module keeps the old entry points alive for
+callers that still import ``perfmodel.predictor``; new code should use the
+cost model directly:
 
-    t = max(compute, memory, collective) + issue_overhead
-
-where `issue_overhead` prices the non-matmul instruction stream with the
-per-op latencies from the table — the term instruction-latency papers exist
-to calibrate.  For MXU-dominated programs the overhead is negligible; for
-the RWKV6/Mamba recurrences (element-wise VPU chains, thousands of scanned
-iterations) it is NOT, which is precisely the paper's point about needing
-per-instruction data, not just peak-FLOPs specs.
+    from repro.core.costmodel import CostModel
+    CostModel.from_named("tpu_v5e").predict(census)
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict
 
-from repro.core.perfmodel.hardware import SPECS, TPU_V5E, HardwareSpec
-
-# HLO op kind -> (table op, elementwise?) mapping: which latency-table entry
-# prices each non-matmul HLO instruction (the ISA-mapping table, inverted).
-_HLO_TO_TABLE = {
-    "add": "add", "subtract": "sub", "multiply": "mul", "divide": "div",
-    "maximum": "max", "minimum": "min", "abs": "abs", "negate": "sub",
-    "and": "and", "or": "and", "xor": "xor", "not": "and",
-    "exponential": "exp", "log": "log", "tanh": "tanh", "rsqrt": "rsqrt",
-    "sqrt": "sqrt", "sine": "sin", "cosine": "sin", "logistic": "sigmoid",
-    "select": "select", "compare": "select", "convert": "add",
-    "reduce": "add", "reduce-window": "add", "broadcast": "add",
-    "iota": "add", "reverse": "add", "transpose": "add", "reshape": "add",
-    "concatenate": "add", "pad": "add", "slice": "add", "fusion": "fma",
-    "dynamic-slice": "add", "dynamic-update-slice": "add", "gather": "add",
-    "scatter": "add", "copy": "add", "rng": "add", "clamp": "select",
-    "power": "exp", "remainder": "rem", "sign": "select", "floor": "add",
-    "ceil": "add", "round-nearest-even": "add", "is-finite": "select",
-    "exponential-minus-one": "exp", "log-plus-one": "log", "cbrt": "rsqrt",
-    "atan2": "tanh", "erf": "tanh", "map": "fma", "sort": "select",
-}
+from repro.core.costmodel.calibration import Calibration
+from repro.core.costmodel.instruction import HLO_TO_TABLE as _HLO_TO_TABLE  # noqa: F401
+from repro.core.costmodel.model import (CostModel, Prediction,  # noqa: F401
+                                        validate_against_paper)
+from repro.core.perfmodel.hardware import SPECS, TPU_V5E, HardwareSpec  # noqa: F401
 
 
-@dataclass
-class Prediction:
-    compute_s: float
-    memory_s: float
-    collective_s: float
-    issue_overhead_s: float
-    step_s: float
-    bottleneck: str
+def _model_for(table: Dict, hw: HardwareSpec) -> CostModel:
+    cal = Calibration.from_dict(dict(table),
+                                name=table.get("hardware", ""))
+    # the old predictor priced CPI cycles at the TARGET hardware's clock
+    # (tables carry CPIs normalized at their own assumed clock)
+    if hw is not None and hw.clock_hz:
+        cal.clock_hz = hw.clock_hz
+    return CostModel(cal, hw=hw)
 
 
 def issue_overhead(op_histogram: Dict[str, float], table: Dict,
                    hw: HardwareSpec = TPU_V5E,
                    per_op_issue_cycles: float = 12.0) -> float:
-    """Price the instruction stream: every top-level HLO op costs at least an
-    issue slot; transcendental-class ops cost their table CPI.  This is the
-    paper's Table V applied as a simulator input."""
-    vpu = table.get("vpu", {})
-    clock = hw.clock_hz or 1e9
-    total_cycles = 0.0
-    for kind, count in op_histogram.items():
-        mapped = _HLO_TO_TABLE.get(kind)
-        cpi = per_op_issue_cycles
-        if mapped:
-            ent = vpu.get(f"{mapped}.f32")
-            if ent:
-                cpi = max(per_op_issue_cycles, ent["cpi"] * 1.0)
-        total_cycles += count * cpi
-    return total_cycles / clock
+    """Old signature: price an instruction stream from a raw table dict."""
+    model = _model_for(table, hw)
+    model.instructions.issue_cycles = per_op_issue_cycles
+    return model.instructions.price_histogram(op_histogram).seconds
 
 
 def predict(census: Dict, mem_bytes_analytic: float, table: Dict,
             hw: HardwareSpec = TPU_V5E) -> Prediction:
-    compute = census["flops"] / hw.peak_flops_bf16
-    memory = mem_bytes_analytic / hw.hbm_bandwidth
-    coll = census["collective_bytes_total"] / (hw.ici_link_bandwidth
-                                               * hw.ici_links)
-    issue = issue_overhead(census.get("op_histogram", {}), table, hw)
-    terms = {"compute": compute, "memory": memory, "collective": coll}
-    bott = max(terms, key=terms.get)
-    return Prediction(compute_s=compute, memory_s=memory, collective_s=coll,
-                      issue_overhead_s=issue,
-                      step_s=max(terms.values()) + issue, bottleneck=bott)
-
-
-def validate_against_paper(table: Dict) -> Dict:
-    """Cross-check the shipped A100 calibration: the paper's own consistency
-    relations (SASS expansion x per-SASS cycles == WMMA cycles; dependent
-    CPI >= independent CPI; >=3-chain convergence) — run as unit tests."""
-    checks = {}
-    tc = table["tensor_core"]
-    for k, v in tc.items():
-        n = int(v["sass"].split("*")[0])
-        checks[f"tc:{k}"] = (n * v["sass_cycles_each"] == v["cycles"]) or \
-            (v["cycles"] <= n * v["sass_cycles_each"] + 8)
-    for k, v in table["dependent_vs_independent"].items():
-        checks[f"dep>=ind:{k}"] = v["dependent"] >= v["independent"]
-    conv = table["cpi_convergence"]
-    checks["chain_convergence"] = conv["1"] >= conv["2"] >= conv["3"] == conv["4"]
-    return checks
+    """Old signature: predict a step from a census + raw table dict."""
+    model = _model_for(table, hw)
+    return model.predict(census, spec=hw, mem_bytes=mem_bytes_analytic)

@@ -1,99 +1,43 @@
-"""Three-term roofline model over dry-run artifacts.
+"""Three-term roofline over dry-run artifacts — now a thin adapter over
+``repro.core.costmodel``.
 
-  compute    = census_FLOPs            / peak_FLOP/s          (per device)
-  memory     = HBM bytes               / HBM bandwidth        (per device)
-  collective = collective wire bytes   / (links x link bw)    (per device)
+  compute    = census_FLOPs            / MXU-layer throughput   (per device)
+  memory     = HBM bytes               / memory-layer bandwidth (per device)
+  collective = collective wire bytes   / (links x link bw)      (per device)
 
-FLOPs and collective bytes come from `repro.core.isa.hlo_census` (while-loop
-trip counts multiplied through).  For the MEMORY term two estimates are
+FLOPs and collective bytes come from ``repro.core.isa.hlo_census`` (while-
+loop trip counts multiplied through).  For the MEMORY term two estimates are
 reported:
 
   * ``mem_census``   - every top-level HLO op's operand+result bytes.  An
     UPPER bound: XLA:CPU (the dry-run backend) fuses less than XLA:TPU, so
     op-boundary tensors that would stay in VMEM on TPU are counted as HBM
     round-trips here.
-  * ``mem_analytic`` - a LOWER bound from first principles: parameter/
-    optimizer-state streaming, activation checkpoints, KV-cache traffic,
-    logits.  This is the roofline memory term; the census value bounds the
-    error from above.
+  * ``mem_analytic`` - a LOWER bound from first principles (moved to
+    ``repro.core.costmodel.analytic``): parameter/optimizer-state streaming,
+    activation checkpoints, KV-cache traffic, logits.  This is the roofline
+    memory term; the census value bounds the error from above.
 
 The bottleneck is whichever term dominates; MODEL_FLOPS/HLO_FLOPs measures
 how much compiled compute is "useful" (remat, head-padding and dispatch
-waste show up here).
+waste show up here).  The term arithmetic itself is ``CostModel.predict``
+over a spec-only calibration; ``Roofline.step_s`` stays the pure
+max-of-terms (no issue overhead) the dry-run tables always reported.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs import SHAPE_CELLS, get_config
-from repro.core.perfmodel.hardware import SPECS, TPU_V5E, HardwareSpec
-from repro.models.zoo import count_active_params, count_params
+# re-exported for compatibility: the byte models moved to costmodel.analytic
+from repro.core.costmodel.analytic import (_param_bytes,  # noqa: F401
+                                           analytic_serve_bytes,
+                                           analytic_train_bytes, cache_bytes)
+from repro.core.costmodel.model import CostModel
+from repro.core.perfmodel.hardware import SPECS, TPU_V5E, HardwareSpec  # noqa: F401
 
-
-def _param_bytes(cfg) -> int:
-    return count_params(cfg) * 4          # f32 master weights
-
-
-def analytic_train_bytes(cfg, cell, n_devices: int, accum: int) -> float:
-    """Per-device HBM bytes for one train step (lower-bound model)."""
-    P = _param_bytes(cfg)
-    n_model = 16
-    n_data = n_devices // n_model
-    P_dev = P / n_devices                 # FSDP+TP fully sharded storage
-    P_stream = P / n_model                # gathered weights a device consumes
-    tokens_dev = cell.global_batch * cell.seq_len / n_data
-    d = cfg.d_model
-    L = cfg.n_layers
-    # forward + recompute + backward each stream the (gathered) weights once,
-    # in bf16 compute copies (half the f32 master bytes)
-    weights = 3 * accum * P_stream * 0.5
-    # gradient accumulation buffer read+write per microstep (f32, sharded)
-    grads = 2 * accum * (P / n_devices) * 4 / 4
-    # optimizer: read p,m,v + write p,m,v (f32, sharded)
-    opt = 6 * P_dev
-    # activation checkpoints: write fwd, read bwd (bf16) - one carry per layer
-    acts = 2 * L * tokens_dev * d * 2
-    # logits written+read in f32 (vocab sharded over model axis)
-    logits = 2 * tokens_dev * cfg.vocab_size / n_model * 4
-    return weights + grads + opt + acts + logits
-
-
-def analytic_serve_bytes(cfg, cell, n_devices: int) -> float:
-    """Per-device HBM bytes for one serve step (prefill or decode)."""
-    P = _param_bytes(cfg)
-    n_model = 16
-    P_stream = P / n_model * 2 / 4        # bf16 weights, TP sharded
-    if cfg.moe and cell.kind == "decode":
-        # decode touches only active experts' weights
-        act_frac = count_active_params(cfg) / count_params(cfg)
-        P_stream *= act_frac
-    if cell.kind == "prefill":
-        n_data = n_devices // n_model
-        tokens_dev = cell.global_batch * cell.seq_len / n_data
-        d = cfg.d_model
-        acts = 2 * cfg.n_layers * tokens_dev * d * 2
-        cache = _cache_bytes(cfg, cell) / n_devices
-        return P_stream + acts + cache
-    # decode: read the whole cache + stream weights once
-    cache = 2 * _cache_bytes(cfg, cell) / n_devices
-    return P_stream + cache
-
-
-def _cache_bytes(cfg, cell) -> float:
-    B, S, L = cell.global_batch, cell.seq_len, cfg.n_layers
-    if cfg.rwkv:
-        H = cfg.d_model // cfg.rwkv.head_dim
-        return L * B * (H * cfg.rwkv.head_dim ** 2 * 4 + 2 * cfg.d_model * 2)
-    if cfg.mla:
-        return L * B * S * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
-    kv = L * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2
-    if cfg.ssm:   # hybrid: + per-layer ssm state
-        kv += L * B * cfg.d_model * cfg.ssm.state_dim * 4
-    if cfg.encdec:
-        kv = cfg.encdec.n_dec_layers * B * S * cfg.n_kv_heads \
-            * cfg.head_dim * 2 * 2 * 2   # self + cross
-    return kv
+_cache_bytes = cache_bytes   # old private name, still imported elsewhere
 
 
 @dataclass
@@ -125,42 +69,31 @@ class Roofline:
 
 
 def from_dryrun(result: Dict, hw: HardwareSpec = TPU_V5E) -> Roofline:
-    """Build the roofline from a dry-run JSON record."""
+    """Build the roofline from a dry-run JSON record via the cost model."""
     cfg = get_config(result["arch"])
     cell = SHAPE_CELLS[result["cell"]]
     n_dev = result["n_devices"]
     cens = result["census"]
 
-    flops_dev = cens["flops"]
-    compute_s = flops_dev / hw.peak_flops_bf16
-
+    model = CostModel.from_hardware(hw)
     if cell.kind == "train":
         mem_b = analytic_train_bytes(cfg, cell, n_dev,
                                      result.get("accum_steps", 1))
     else:
         mem_b = analytic_serve_bytes(cfg, cell, n_dev)
-    memory_s = mem_b / hw.hbm_bandwidth
-    memory_census_s = cens["hbm_bytes"] / hw.hbm_bandwidth
-
-    # prefer the TPU-width-adjusted wire bytes (XLA:CPU legalizes bf16 dots
-    # to f32, inflating the measured collective width 2x vs the TPU target)
-    coll_b = cens.get("collective_bytes_total_tpu",
-                      cens["collective_bytes_total"])
-    coll_bw = hw.ici_link_bandwidth * hw.ici_links
-    collective_s = coll_b / coll_bw
+    pred = model.predict(cens, spec=hw, mem_bytes=mem_b, dtype="bf16")
+    memory_census_s = model.memory.transfer_seconds(cens["hbm_bytes"])
 
     model_flops_dev = result["model_flops_global"] / n_dev
-    useful = model_flops_dev / max(flops_dev, 1.0)
-    terms = {"compute": compute_s, "memory": memory_s,
-             "collective": collective_s}
-    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_dev / max(cens["flops"], 1.0)
+    step_s = max(pred.compute_s, pred.memory_s, pred.collective_s)
     return Roofline(
         arch=result["arch"], cell=result["cell"], mesh=result["mesh"],
-        compute_s=compute_s, memory_s=memory_s,
-        memory_census_s=memory_census_s, collective_s=collective_s,
-        bottleneck=bottleneck, model_flops=model_flops_dev,
-        hlo_flops=flops_dev, useful_ratio=useful,
-        step_s=max(terms.values()), hw=hw.name)
+        compute_s=pred.compute_s, memory_s=pred.memory_s,
+        memory_census_s=memory_census_s, collective_s=pred.collective_s,
+        bottleneck=pred.bottleneck, model_flops=model_flops_dev,
+        hlo_flops=cens["flops"], useful_ratio=useful,
+        step_s=step_s, hw=hw.name)
 
 
 def roofline_fraction(r: Roofline, hw: HardwareSpec = TPU_V5E) -> float:

@@ -6,6 +6,15 @@ positions — the model's decode path already takes per-row `pos`), decodes
 one token per step for every active slot, and retires sequences on EOS or
 length budget.  This is the vLLM-style loop reduced to its scheduling core,
 with slot-granular (not paged) KV memory.
+
+Admission control is cost-model-driven when a ``repro.core.costmodel.
+CostModel`` is supplied: the engine prices the decode step and each pending
+prefill from their compiled modules' instruction censuses, and packs
+prefills into an engine iteration only while the predicted iteration time
+(decode + admitted prefills) stays under ``step_budget_s`` — the predicted
+decode-step latency gates how many prefills ride along, instead of greedily
+stuffing every free slot and stalling in-flight decodes behind a wall of
+prefill compute.
 """
 from __future__ import annotations
 
@@ -13,12 +22,13 @@ import dataclasses
 import itertools
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.costmodel.model import CostModel, Prediction
 from repro.models.zoo import Model
 
 
@@ -40,15 +50,22 @@ class EngineStats:
     prefills: int = 0
     decoded_tokens: int = 0
     completed: int = 0
+    deferred_prefills: int = 0      # admissions pushed to a later step
+    predicted_step_s: List[float] = dataclasses.field(default_factory=list)
+    measured_step_s: List[float] = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
-                 max_len: int = 512):
+                 max_len: int = 512,
+                 cost_model: Optional[CostModel] = None,
+                 step_budget_s: Optional[float] = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.cost_model = cost_model
+        self.step_budget_s = step_budget_s
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.stats = EngineStats()
@@ -59,6 +76,7 @@ class ServingEngine:
         self.slot_pos = np.zeros(max_batch, np.int32)
         self.slot_tok = np.zeros(max_batch, np.int32)
         self._decode = jax.jit(model.decode)
+        self._pred_cache: Dict = {}
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> int:
@@ -68,9 +86,76 @@ class ServingEngine:
                                   submitted_s=time.time()))
         return rid
 
+    # -- cost-model pricing ---------------------------------------------------
+    def _predict_decode(self) -> Prediction:
+        """Price one decode step (fixed shape: the padded max_batch).  The
+        AOT executable this compiles REPLACES the jitted decode fn — jit's
+        dispatch cache would not reuse it, and the decode shapes never
+        change — so pricing costs no extra compilation."""
+        key = ("decode", self.max_batch)
+        if key not in self._pred_cache:
+            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+            pos = jnp.zeros((self.max_batch,), jnp.int32)
+            compiled = self._decode.lower(self.params, self.cache,
+                                          toks, pos).compile()
+            self._pred_cache[key] = self.cost_model.predict_compiled(
+                compiled.as_text())
+            self._decode = compiled
+        return self._pred_cache[key]
+
+    def _predict_prefill(self, prompt_len: int) -> Prediction:
+        """Price one prefill at this prompt length (cached per length).
+
+        Priced ANALYTICALLY (``costmodel.analytic``), not by compiling the
+        prefill — the admission loop runs per engine step and a per-length
+        XLA compile there would stall serving for pure bookkeeping (the
+        execution path calls ``model.prefill`` eagerly and never reuses
+        such a compile)."""
+        key = ("prefill", prompt_len)
+        if key not in self._pred_cache:
+            from repro.configs.base import ShapeCell
+            from repro.core.costmodel.analytic import analytic_census
+            cell = ShapeCell("admission", "prefill", prompt_len, 1)
+            census = analytic_census(self.model.cfg, cell, n_devices=1,
+                                     n_model=1)
+            self._pred_cache[key] = self.cost_model.predict(census)
+        return self._pred_cache[key]
+
     # -- internals ------------------------------------------------------------
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> float:
+        """Pack queued prefills into free slots; returns the predicted time
+        of this engine iteration (0.0 when no cost model is attached).
+
+        With a cost model + budget, admission stops once the predicted
+        iteration time (decode step + admitted prefills) would exceed the
+        budget — but always admits at least one prefill when a slot is
+        free, so the engine cannot starve on an over-tight budget."""
+        gated = (self.cost_model is not None
+                 and self.step_budget_s is not None)
+        planned = self._predict_decode().step_s \
+            if self.cost_model is not None else 0.0
+        admitted = 0
+        free = self._free_slots()
+        for idx, slot in enumerate(free):
+            if not self.queue:
+                break
+            if self.cost_model is not None:
+                pre_s = self._predict_prefill(
+                    len(self.queue[0].prompt)).step_s
+                if gated and admitted > 0 \
+                        and planned + pre_s > self.step_budget_s:
+                    # count only requests a free slot could have taken
+                    # this step; they retry next step
+                    self.stats.deferred_prefills += min(
+                        len(self.queue), len(free) - idx)
+                    break
+                planned += pre_s
+            self._prefill_into_slot(slot, self.queue.popleft())
+            admitted += 1
+        return planned
 
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prefill a single request and splice its KV into the batch cache."""
@@ -96,10 +181,8 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine iteration: admit, decode, retire.  Returns #active."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            self._prefill_into_slot(slot, self.queue.popleft())
+        t0 = time.perf_counter()
+        planned = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return 0
@@ -108,6 +191,9 @@ class ServingEngine:
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.stats.steps += 1
+        if self.cost_model is not None:
+            self.stats.predicted_step_s.append(planned)
+            self.stats.measured_step_s.append(time.perf_counter() - t0)
         for i in active:
             req = self.slot_req[i]
             req.tokens.append(int(nxt[i]))

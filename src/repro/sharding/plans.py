@@ -1,4 +1,5 @@
-"""Turn logical PartitionSpec trees into concrete NamedShardings for a mesh.
+"""Turn logical PartitionSpec trees into concrete NamedShardings for a mesh,
+and RANK candidate mesh layouts by predicted step time.
 
 Specs are authored with logical axis names 'data' (FSDP) and 'model'
 (TP/EP/SP).  ``sanitize_specs`` drops a sharded axis from a spec when the
@@ -6,14 +7,23 @@ corresponding dim is not divisible by the axis size (GSPMD supports padding,
 but uneven shardings of tiny dims - e.g. 4 query heads over 16-way model
 parallelism - waste >50% of the axis; replication is strictly better there).
 The sanitation decisions are returned so EXPERIMENTS.md can report them.
+
+``rank_plans`` replaces the old fixed 16-way-model heuristic with the
+calibrated cost model: every (data, model) factorization of the device
+count is priced through ``CostModel.predict`` over an analytic census
+(``repro.core.costmodel.analytic``) and candidates come back sorted by
+predicted step time — measured microarchitecture tables choosing the mesh,
+which is the ROADMAP's point of calibrating them.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.costmodel.model import CostModel, Prediction
 from repro.launch.mesh import batch_axes, n_batch_shards
 
 
@@ -77,6 +87,67 @@ def train_shardings(model, optimizer, mesh: Mesh, cell):
             named_tree(mesh, bspecs),
             {"params": param_shapes, "opt": opt_shapes,
              "batch": batch_shapes}, log)
+
+
+@dataclasses.dataclass
+class RankedPlan:
+    """One candidate mesh layout with its cost-model verdict."""
+    data: int                       # data-parallel (FSDP/batch) axis size
+    model: int                      # model-parallel (TP/EP/SP) axis size
+    prediction: Prediction
+
+    @property
+    def step_s(self) -> float:
+        return self.prediction.step_s
+
+    @property
+    def mesh_shape(self) -> Tuple[int, int]:
+        return (self.data, self.model)
+
+    def describe(self) -> str:
+        p = self.prediction
+        return (f"data={self.data} model={self.model}: "
+                f"step={p.step_s:.3e}s ({p.bottleneck}-bound)")
+
+
+def candidate_mesh_shapes(n_devices: int,
+                          cfg=None) -> List[Tuple[int, int]]:
+    """All (data, model) factorizations of the device count, dropping model
+    widths that cannot shard BOTH the Q and KV head dims evenly
+    (approximating the per-dim divisibility rule ``sanitize_specs``
+    enforces — an uneven model axis replicates those projections at
+    mesh-build time, so the analytic census would overprice its benefit)."""
+    shapes = []
+    for m in range(1, n_devices + 1):
+        if n_devices % m:
+            continue
+        if cfg is not None and m > 1 \
+                and (cfg.n_heads % m or cfg.n_kv_heads % m):
+            continue
+        shapes.append((n_devices // m, m))
+    return shapes or [(n_devices, 1)]
+
+
+def rank_plans(cfg, cell, n_devices: int,
+               cost_model: Optional[CostModel] = None,
+               accum: int = 1) -> List[RankedPlan]:
+    """Rank candidate (data, model) mesh layouts by predicted step time.
+
+    Each candidate is priced through the calibrated cost model over an
+    analytic census parameterized by the candidate's model-parallel width
+    (per-device FLOPs, HBM bytes, ring-collective wire bytes, op
+    histogram).  Returns plans sorted ascending by predicted step time —
+    ``rank_plans(...)[0]`` is the recommended mesh."""
+    from repro.core.costmodel.analytic import analytic_census
+    cost_model = cost_model or CostModel.from_named("tpu_v5e")
+    plans = []
+    for d, m in candidate_mesh_shapes(n_devices, cfg):
+        census = analytic_census(cfg, cell, n_devices, n_model=m,
+                                 accum=accum)
+        pred = cost_model.predict(census)   # hbm_bytes already analytic
+        plans.append(RankedPlan(data=d, model=m, prediction=pred))
+    plans.sort(key=lambda pl: pl.step_s)
+    return plans
 
 
 def serve_shardings(model, mesh: Mesh, cell):

@@ -33,13 +33,21 @@ class TrainResult:
     losses: List[float]
     restored_from: Optional[int]
     events: List
+    predicted_step_s: Optional[float] = None   # cost-model verdict
+    step_times_s: List[float] = dataclasses.field(default_factory=list)
 
 
 def train(model: Model, mesh, *, num_steps: int = 50,
           global_batch: int = 8, seq_len: int = 64,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
           lr: float = 3e-3, seed: int = 0,
-          hooks: Optional[List[Callable]] = None) -> TrainResult:
+          hooks: Optional[List[Callable]] = None,
+          cost_model=None, log_prediction: bool = False) -> TrainResult:
+    """Run the training loop; with ``cost_model`` (a ``repro.core.costmodel.
+    CostModel``) the compiled step is priced once up front and every step's
+    metrics carry ``predicted_step_s`` / ``measured_step_s`` so hooks (and
+    ``log_prediction=True`` stdout) can track predicted-vs-measured drift —
+    the paper's close-the-loop validation applied to a live training run."""
     cfg = model.cfg
     optimizer = optim_mod.make_optimizer(cfg.optimizer, lr_peak=lr)
 
@@ -82,16 +90,39 @@ def train(model: Model, mesh, *, num_steps: int = 50,
     # ----- fault tolerance ------------------------------------------------------
     runner = FaultTolerantRunner(HeartbeatRegistry(["host0"]))
 
+    # ----- cost model: price the compiled step once, log against it each step --
+    predicted_step_s = None
+    if cost_model is not None:
+        peek = next(it)
+        # compile ONCE ahead of time, price that executable, and run the
+        # loop on it (jit's dispatch cache would not reuse an AOT compile)
+        step_fn = step_fn.lower(params, opt_state, peek).compile()
+        pred = cost_model.predict_compiled(step_fn.as_text())
+        predicted_step_s = pred.step_s
+        first_batch = peek
+    else:
+        first_batch = None
+
     losses = []
+    step_times: List[float] = []
     t_step = time.time()
     for step in range(start_step, num_steps):
-        batch = next(it)
+        batch = first_batch if first_batch is not None else next(it)
+        first_batch = None
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         losses.append(loss)
         dt = time.time() - t_step
         t_step = time.time()
+        step_times.append(dt)
         runner.on_step("host0", step, dt)
+        if predicted_step_s is not None:
+            metrics = {**metrics, "predicted_step_s": predicted_step_s,
+                       "measured_step_s": dt}
+            if log_prediction:
+                print(f"step {step}: predicted={predicted_step_s:.3e}s "
+                      f"measured={dt:.3e}s "
+                      f"ratio={dt / max(predicted_step_s, 1e-12):.2f}x")
         for h in hooks or []:
             h(step, metrics)
         if mgr is not None and (step + 1) % ckpt_every == 0:
@@ -100,4 +131,6 @@ def train(model: Model, mesh, *, num_steps: int = 50,
         mgr.save(num_steps, {"p": params, "o": opt_state}, block=True)
         mgr.wait()
     return TrainResult(num_steps - start_step, losses[-1] if losses else
-                       float("nan"), losses, restored_from, runner.events)
+                       float("nan"), losses, restored_from, runner.events,
+                       predicted_step_s=predicted_step_s,
+                       step_times_s=step_times)

@@ -1,0 +1,278 @@
+"""Unified cost-model subsystem: calibration loaders (all three formats +
+canonical round-trip), the three layers' invariants (monotonicity, dtype
+ordering, dependent>=independent), defaulted-op tracking, the
+prediction-error fixture against the shipped calibrations, plan ranking,
+and the measurement-free CLI."""
+import json
+
+import pytest
+
+from repro.core.costmodel import (CostModel, Calibration, load_calibration,
+                                  prediction_error_rows,
+                                  prediction_error_summary, save_calibration)
+from repro.core.costmodel import cli as costmodel_cli
+from repro.core.microbench import tables
+from repro.core.perfmodel.hardware import A100_40G, TPU_V5E
+
+BASE_CENSUS = {
+    "flops": 1e12,
+    "hbm_bytes": 1e9,
+    "collective_bytes_total": 1e8,
+    "op_histogram": {"fusion": 100.0, "dot": 10.0, "add": 50.0,
+                     "multiply": 20.0, "tanh": 5.0},
+}
+
+
+@pytest.fixture(scope="module", params=["ampere_a100", "tpu_v5e"])
+def shipped(request):
+    return request.param, CostModel.from_named(request.param)
+
+
+# ---------------------------------------------------------------------------
+# loaders + round-trip
+# ---------------------------------------------------------------------------
+
+def test_shipped_calibrations_normalize(shipped):
+    name, model = shipped
+    assert model.cal.instructions, name
+    assert model.cal.clock_hz > 1e8
+    assert model.memory.bandwidth_bps > 0
+    assert model.mxu.throughput("bf16") > 0
+
+
+def test_canonical_round_trip_dict(shipped):
+    _, model = shipped
+    doc = model.cal.to_dict()
+    again = Calibration.from_dict(doc)
+    assert again.to_dict() == doc
+
+
+def test_round_trip_through_file_preserves_predictions(tmp_path, shipped):
+    name, model = shipped
+    path = save_calibration(model.cal, tmp_path / f"{name}.json")
+    reloaded = CostModel(load_calibration(path), hw=model.hw)
+    a = model.predict(BASE_CENSUS)
+    b = reloaded.predict(BASE_CENSUS)
+    assert a.step_s == pytest.approx(b.step_s, rel=1e-9)
+    assert a.issue_overhead_s == pytest.approx(b.issue_overhead_s, rel=1e-9)
+    assert a.defaulted_ops == b.defaulted_ops
+
+
+def test_campaign_table_loader_converts_ns_to_cycles():
+    table = {
+        "schema_version": 1, "hardware": "cpu",
+        "ops": {"add.float32.dep": {"per_op_ns": 2.0, "overhead_ns": 0.0},
+                "add.float32.ind": {"per_op_ns": 1.0, "overhead_ns": 0.0}},
+        "memory": {"16384": {"per_hop_ns": 7.5, "overhead_ns": 0.0}},
+        "memory_streaming": {"16KiB": {"gbps": 10.0}},
+        "mxu": {"float32.m128n128k128.ind":
+                {"per_op_us": 1.0, "tflops": 4.0}},
+        "vpu": {}, "roofline": {},
+    }
+    cal = Calibration.from_dict(table)   # default 1 GHz clock
+    assert cal.instructions["add.f32"].dependent_cycles == pytest.approx(2.0)
+    assert cal.instructions["add.f32"].independent_cycles == pytest.approx(1.0)
+    assert cal.memory_levels[0].latency_ns == pytest.approx(7.5)
+    assert cal.bandwidth_bps == pytest.approx(10e9)
+    m = CostModel(cal, hw=TPU_V5E)
+    assert m.mxu.throughput("f32", (128, 128, 128)) == pytest.approx(4e12)
+
+
+def test_degenerate_zero_rate_mxu_point_does_not_crash():
+    """A failed MXU probe (tflops=0.0) must not become a zero peak and
+    divide-by-zero the predictor."""
+    table = {
+        "schema_version": 1, "hardware": "cpu",
+        "ops": {"add.float32.dep": {"per_op_ns": 2.0, "overhead_ns": 0.0}},
+        "memory": {}, "mxu": {"bfloat16.m128n128k128.ind":
+                              {"per_op_us": 0.0, "tflops": 0.0}},
+        "vpu": {}, "roofline": {},
+    }
+    m = CostModel(Calibration.from_dict(table), hw=TPU_V5E)
+    p = m.predict(BASE_CENSUS, dtype="bf16")
+    assert p.compute_s > 0 and p.step_s > 0
+
+
+def test_unknown_format_raises():
+    with pytest.raises(ValueError, match="unrecognized calibration"):
+        Calibration.from_dict({"bogus": 1})
+
+
+def test_load_calibration_unknown_name():
+    with pytest.raises(FileNotFoundError):
+        load_calibration("no_such_calibration")
+
+
+# ---------------------------------------------------------------------------
+# the prediction-error fixture (acceptance: within 10% on shipped tables)
+# ---------------------------------------------------------------------------
+
+def test_prediction_error_within_10pct(shipped):
+    name, model = shipped
+    rows = prediction_error_rows(model)
+    assert rows, name
+    s = prediction_error_summary(rows)
+    bad = [r for r in rows if r["err_pct"] > 10.0]
+    assert s["max_err_pct"] <= 10.0, bad
+
+
+def test_prediction_error_table_renders():
+    from repro.core.campaign import report
+    rows = report.prediction_error_table(tables.ampere_table(),
+                                         name="ampere_a100")
+    names = [r[0] for r in rows]
+    assert any(n.startswith("prederr/instr/") for n in names)
+    assert any(n.startswith("prederr/mxu/") for n in names)
+    assert names[-1] == "prederr/summary"
+    assert "max_err_pct=" in rows[-1][2]
+
+
+# ---------------------------------------------------------------------------
+# layer invariants
+# ---------------------------------------------------------------------------
+
+def test_defaulted_ops_tracked_not_silently_priced(shipped):
+    _, model = shipped
+    census = dict(BASE_CENSUS)
+    census["op_histogram"] = {**BASE_CENSUS["op_histogram"],
+                              "transpose": 7.0, "reshape": 3.0,
+                              "iota": 2.0, "rng": 1.0}
+    p = model.predict(census)
+    # layout/data-movement kinds must surface as gaps, not price as 'add'
+    assert p.defaulted_ops.get("transpose") == 7.0
+    assert p.defaulted_ops.get("reshape") == 3.0
+    assert p.defaulted_op_count >= 13.0
+    # genuinely arithmetic kinds are mapped (and dot is MXU-priced, not a gap)
+    assert "add" not in p.defaulted_ops
+    assert "dot" not in p.defaulted_ops
+    assert p.mapped_op_count > 0
+
+
+def test_issue_monotonic_in_instruction_count(shipped):
+    _, model = shipped
+    base = model.predict(BASE_CENSUS)
+    more = dict(BASE_CENSUS)
+    more["op_histogram"] = {k: v * 3 for k, v
+                            in BASE_CENSUS["op_histogram"].items()}
+    more["op_histogram"]["transpose"] = 50.0
+    grown = model.predict(more)
+    assert grown.issue_overhead_s >= base.issue_overhead_s
+    assert grown.step_s >= base.step_s
+
+
+def test_compute_monotonic_in_flops(shipped):
+    _, model = shipped
+    lo = model.predict(dict(BASE_CENSUS, flops=1e10))
+    hi = model.predict(dict(BASE_CENSUS, flops=1e13))
+    assert hi.compute_s >= lo.compute_s
+    assert hi.step_s >= lo.step_s
+
+
+def test_mxu_dtype_ordering(shipped):
+    """f32 must never be faster than bf16 on the matrix unit (paper
+    Table III ordering), for measured, target, and spec-only models."""
+    _, model = shipped
+    assert model.mxu.time_for_flops(1e12, "f32") >= \
+        model.mxu.time_for_flops(1e12, "bf16")
+
+
+def test_mxu_dtype_ordering_spec_only():
+    for hw in (TPU_V5E, A100_40G):
+        m = CostModel.from_hardware(hw)
+        assert m.mxu.time_for_flops(1e12, "f32") >= \
+            m.mxu.time_for_flops(1e12, "bf16")
+
+
+def test_instruction_dependent_ge_independent():
+    model = CostModel.from_named("ampere_a100")
+    for e in model.cal.instructions.values():
+        assert e.dependent_cycles >= e.independent_cycles, e
+
+
+def test_memory_layer_hierarchy():
+    model = CostModel.from_named("tpu_v5e")
+    small = model.memory.access_latency_ns(1024)           # VMEM-resident
+    big = model.memory.access_latency_ns(8 * 2**30)        # HBM-resident
+    assert small < big
+    assert model.memory.transfer_seconds(2**30) == pytest.approx(
+        2**30 / model.memory.bandwidth_bps)
+
+
+def test_validate_against_paper_consistency():
+    from repro.core.costmodel import validate_against_paper
+    checks = validate_against_paper(tables.ampere_table())
+    assert all(checks.values()), \
+        {k: v for k, v in checks.items() if not v}
+
+
+# ---------------------------------------------------------------------------
+# plan ranking
+# ---------------------------------------------------------------------------
+
+def test_rank_plans_sorted_and_complete():
+    from repro.configs import ARCHS, SHAPE_CELLS
+    from repro.sharding.plans import rank_plans
+    cfg = ARCHS["gemma2-2b"]
+    plans = rank_plans(cfg, SHAPE_CELLS["train_4k"], n_devices=16)
+    assert plans
+    assert all(p.data * p.model == 16 for p in plans)
+    steps = [p.step_s for p in plans]
+    assert steps == sorted(steps)
+    assert plans[0].describe()
+
+
+def test_rank_plans_model_axis_matters():
+    """A pure-DP plan and a TP plan must price differently (the ranker is
+    not a constant function of the mesh shape)."""
+    from repro.configs import ARCHS, SHAPE_CELLS
+    from repro.sharding.plans import rank_plans
+    cfg = ARCHS["yi-34b"]
+    plans = rank_plans(cfg, SHAPE_CELLS["decode_32k"], n_devices=8)
+    by_shape = {p.mesh_shape: p.step_s for p in plans}
+    assert len(set(by_shape.values())) > 1
+
+
+# ---------------------------------------------------------------------------
+# compiled-module pricing
+# ---------------------------------------------------------------------------
+
+def test_predict_fn_prices_compiled_module():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    model = CostModel.from_named("tpu_v5e")
+    x = jnp.ones((64, 64), jnp.float32)
+    pred = model.predict_fn(jax.jit(lambda v: jnp.tanh(v @ v)), x,
+                            dtype="f32")
+    assert pred.step_s > 0
+    assert pred.mapped_op_count + pred.defaulted_op_count > 0
+
+
+# ---------------------------------------------------------------------------
+# CLI (measurement-free; the CI smoke path)
+# ---------------------------------------------------------------------------
+
+def test_cli_prediction_error_smoke(capsys):
+    rc = costmodel_cli.main(["--calibration", "ampere_a100",
+                             "--prediction-error"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "prederr/instr/FADD.f32.dep" in out
+    assert "max_err_pct=" in out
+
+
+def test_cli_demo_reports_defaulted_ops(capsys):
+    rc = costmodel_cli.main(["--calibration", "tpu_v5e", "--demo"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "defaulted_ops" in out
+    assert "defaulted/transpose" in out
+
+
+def test_cli_export_round_trip(tmp_path, capsys):
+    out_path = tmp_path / "cal.json"
+    rc = costmodel_cli.main(["--calibration", "tpu_v5e",
+                             "--export", str(out_path)])
+    assert rc == 0
+    doc = json.loads(out_path.read_text())
+    assert doc["kind"] == "costmodel_calibration"
+    assert CostModel.from_named(out_path).predict(BASE_CENSUS).step_s > 0

@@ -1,12 +1,13 @@
-"""End-to-end behaviour: serving engine vs raw decode, and the training loop
-with checkpoint-restart determinism (replacing the old placeholder
-test_system.py)."""
+"""End-to-end behaviour: serving engine vs raw decode (with and without
+cost-model-gated admission), and the training loop with checkpoint-restart
+determinism and predicted-vs-measured step logging."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced
+from repro.core.costmodel import CostModel
 from repro.launch.mesh import make_host_mesh
 from repro.models.zoo import build_model
 from repro.serve.engine import ServingEngine
@@ -56,6 +57,54 @@ def test_engine_queues_beyond_batch(tiny_lm):
     assert stats.completed == 5
     assert stats.prefills == 5
     assert all(len(r.tokens) == 4 for r in eng.done.values())
+
+
+def test_engine_cost_model_admission_defers_but_completes(tiny_lm):
+    """With a deliberately tight step budget the engine must stage prefill
+    admissions across steps (deferrals observed) yet still finish every
+    request with the same greedy tokens."""
+    cfg, model, params = tiny_lm
+    cm = CostModel.from_named("tpu_v5e")
+    eng = ServingEngine(model, params, max_batch=4, max_len=48,
+                        cost_model=cm, step_budget_s=0.0)
+    prompts = [np.arange(3 + i, dtype=np.int32) % cfg.vocab_size
+               for i in range(6)]
+    rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    stats = eng.run_until_done()
+    assert stats.completed == 6
+    assert stats.deferred_prefills > 0          # the budget actually gated
+    assert len(stats.predicted_step_s) == stats.steps
+    assert all(s > 0 for s in stats.predicted_step_s)
+    for rid, p in zip(rids, prompts):
+        want = _greedy_reference(model, params, jnp.asarray(p), 4, 48)
+        assert eng.done[rid].tokens == want
+
+
+def test_engine_cost_model_generous_budget_packs_greedily(tiny_lm):
+    """A generous budget must not change the old greedy packing."""
+    cfg, model, params = tiny_lm
+    cm = CostModel.from_named("tpu_v5e")
+    eng = ServingEngine(model, params, max_batch=2, max_len=32,
+                        cost_model=cm, step_budget_s=1e9)
+    for i in range(5):
+        eng.submit(np.arange(3 + i, dtype=np.int32), max_new_tokens=4)
+    stats = eng.run_until_done()
+    assert stats.completed == 5
+    assert stats.deferred_prefills == 0
+
+
+def test_train_logs_predicted_vs_measured(tmp_path):
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=64)
+    model = build_model(cfg)
+    seen = []
+    res = train(model, make_host_mesh(), num_steps=3, global_batch=4,
+                seq_len=16, cost_model=CostModel.from_named("tpu_v5e"),
+                hooks=[lambda step, m: seen.append(m)])
+    assert res.predicted_step_s is not None and res.predicted_step_s > 0
+    assert len(res.step_times_s) == 3
+    assert all("predicted_step_s" in m and "measured_step_s" in m
+               for m in seen)
+    assert seen[0]["predicted_step_s"] == res.predicted_step_s
 
 
 def test_train_loss_decreases(tmp_path):
