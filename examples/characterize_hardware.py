@@ -10,7 +10,10 @@ cost model — the paper-as-a-tool, end to end:
      (the prediction-error table; must stay ~0%),
   4. price a real compiled module on THIS host's numbers vs the shipped
      calibrations (the close-the-loop step the follow-on dissection papers
-     run against their analytical models).
+     run against their analytical models),
+  5. tune: feed the measured cost model to the kernel autotuner and print
+     default-vs-tuned predicted step time for every tunable Pallas kernel
+     (the measure -> model -> tune loop, closed).
 
 On a real TPU the emitted table refreshes repro/core/calibration/
 tpu_v5e.json; on CPU it characterizes the host.
@@ -74,6 +77,18 @@ def main(argv=None):
     for name, m in models.items():
         pred = m.predict_fn(fn, x, dtype="f32")
         print(f"  {name:16s} {pred.summary()}")
+
+    # ---- 5. autotune: the measured model picks kernel launch configs ---------
+    from repro.core.autotune import Autotuner, TuningCache, tunable_names
+    tuner = Autotuner(host, TuningCache("results/autotune/host_cache.json"))
+    print("\n== autotune: default vs tuned predicted step (host model) ==")
+    for kernel in tunable_names():
+        r = tuner.tune(kernel)
+        cfg = json.dumps(r.best, sort_keys=True)
+        print(f"  {kernel:16s} default={r.predicted_default_s:.3e}s  "
+              f"tuned={r.predicted_best_s:.3e}s  "
+              f"(x{r.predicted_speedup:.2f})  {cfg}")
+    print(f"  cache: {tuner.cache.path} ({len(tuner.cache)} entries)")
 
     out_dir = pathlib.Path("results")
     out = out_dir / "host_calibration.json"

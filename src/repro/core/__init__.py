@@ -1,2 +1,20 @@
-from repro.core import costmodel, isa, microbench, perfmodel  # noqa
-from repro.core import campaign  # noqa  (last: depends on the above)
+"""The measurement/model/tuning core.
+
+Submodules load lazily (PEP 562): the analytic consumers — the cost-model
+and autotune CLIs, calibration loading, candidate ranking — must answer
+without importing jax, which ``microbench``/``isa`` pull in eagerly.
+"""
+import importlib
+
+_SUBMODULES = ("autotune", "campaign", "costmodel", "isa", "microbench",
+               "perfmodel")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

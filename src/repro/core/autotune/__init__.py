@@ -1,0 +1,92 @@
+"""Cost-model-guided kernel autotuner with a persistent tuning cache.
+
+Closes the paper's loop — measure (campaign tables) -> model (costmodel)
+-> **tune**: launch configurations for the tunable Pallas kernels
+(``flash_attention``, ``ssm_scan``, ``wkv6``, ``mxu_probe``) are
+enumerated MXU-aligned, pruned against the calibration's hardware
+constraints, ranked analytically with ``CostModel.predict`` (no device
+needed, fully deterministic) and optionally refined with measured
+timings; winners persist in a schema-versioned JSON cache keyed by
+``(kernel, shape-bucket, dtype, device_kind, calibration_id)``.
+
+The dispatch side is a process-global handle: ``install`` an
+:class:`Autotuner` (the serving engine and the train loop do this when
+given one) and every ``repro.kernels`` wrapper called with ``tuned=True``
+resolves its launch config through :func:`tuned_config`.
+
+This ``__init__`` is lazy (PEP 562): the kernels' dispatch layer imports
+``repro.core.autotune.space`` (pure stdlib — launch defaults, divisor
+clamping, censuses) without pulling ``search``/``cache``/``costmodel``
+into every kernel import; those load on first attribute access.
+
+CLI: ``python -m repro.core.autotune tune --analytic-only --kernel
+flash_attention`` (then ``show`` / ``export``) — runs cost-model-only on
+CPU CI.
+"""
+from __future__ import annotations
+
+import importlib
+from contextlib import contextmanager
+from typing import Any, Dict, Mapping, Optional
+
+# public name -> defining submodule (resolved on first access)
+_EXPORTS = {
+    "Autotuner": "search", "AutotuneStats": "search", "TuneResult": "search",
+    "TuningCache": "cache", "DEFAULT_CACHE_PATH": "cache",
+    "entry_key": "cache", "split_key": "cache",
+    "TUNABLES": "space", "Tunable": "space", "get_tunable": "space",
+    "shape_bucket": "space", "tunable_names": "space",
+    "vmem_budget_bytes": "space", "divisor_clamp": "space",
+}
+_SUBMODULES = ("cache", "cli", "search", "space")
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(
+            f"repro.core.autotune.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.autotune.{name}")
+    raise AttributeError(
+        f"module 'repro.core.autotune' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))
+
+
+# the process-global dispatch handle (None = every tuned=True lookup is a
+# no-op and kernels fall back to their MXU-aligned defaults)
+_ACTIVE = None
+
+
+def install(tuner) -> Optional[Any]:
+    """Make ``tuner`` the process-global autotuner; returns the previous
+    one so callers can restore it (``train.loop`` does)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, tuner
+    return prev
+
+
+def active():
+    return _ACTIVE
+
+
+@contextmanager
+def using(tuner):
+    """Scoped :func:`install`."""
+    prev = install(tuner)
+    try:
+        yield tuner
+    finally:
+        install(prev)
+
+
+def tuned_config(kernel: str, shapes: Mapping[str, int],
+                 dtype: str = "bf16") -> Optional[Dict[str, Any]]:
+    """The kernel-dispatch lookup: the installed autotuner's cached config
+    for this problem, or None (kernel not tunable / no handle / no entry)."""
+    if _ACTIVE is None:
+        return None
+    return _ACTIVE.lookup(kernel, shapes, dtype)

@@ -1,0 +1,332 @@
+"""The two-stage search: analytic ranking, optional measured refinement.
+
+Stage 1 prices every surviving candidate with ``CostModel.predict`` over
+the tunable's analytic census — deterministic, device-free, milliseconds —
+and ranks ascending by predicted step time (ties broken by the canonical
+JSON of the config, so the ranking is total and reproducible).  Stage 2,
+when measurement is enabled, times the top-K candidates with the
+microbenchmark harness (``microbench.harness.time_fn`` over the public
+kernel entry points in ``repro.kernels``) and lets the median wall time
+pick the winner — the paper's measure-don't-guess discipline applied to
+the model's own shortlist.
+
+Winners persist through :class:`TuningCache` keyed by ``(kernel,
+shape-bucket, dtype, device_kind, calibration_id)``; ``lookup`` is the
+read side the kernel dispatch path (``repro.kernels.ops``) consults.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional
+
+from repro.core.autotune.cache import TuningCache, entry_key
+from repro.core.autotune.space import (Tunable, get_tunable, shape_bucket,
+                                       tunable_names, vmem_budget_bytes)
+from repro.core.costmodel.calibration import canon_dtype
+
+# ranked-table rows kept inside a cache entry (full rankings can be long)
+_ENTRY_ROWS = 8
+
+
+@dataclass
+class TuneResult:
+    """One kernel's tuning outcome: the full ranked table plus the pick."""
+    kernel: str
+    shapes: Dict[str, int]
+    dtype: str
+    key: str
+    ranked: List[Dict[str, Any]]          # {config, predicted_s, ...} rows
+    best: Dict[str, Any]                  # winning config
+    default: Dict[str, Any]               # effective default config
+    predicted_best_s: float
+    predicted_default_s: float
+    measured_best_s: Optional[float] = None
+    measured_default_s: Optional[float] = None
+    source: str = "analytic"              # analytic | measured
+
+    @property
+    def predicted_speedup(self) -> float:
+        """Default-over-best predicted step time (>= 1 when tuning helps)."""
+        return self.predicted_default_s / max(self.predicted_best_s, 1e-30)
+
+    @property
+    def measured_speedup(self) -> Optional[float]:
+        if self.measured_best_s is None or self.measured_default_s is None:
+            return None
+        return self.measured_default_s / max(self.measured_best_s, 1e-30)
+
+    def summary(self) -> str:
+        cfg = json.dumps(self.best, sort_keys=True)
+        s = (f"{self.kernel}: best={cfg} "
+             f"predicted={self.predicted_best_s:.3e}s "
+             f"(default {self.predicted_default_s:.3e}s, "
+             f"x{self.predicted_speedup:.2f})")
+        if self.measured_best_s is not None:
+            s += f" measured={self.measured_best_s:.3e}s"
+            if self.measured_speedup is not None:
+                s += f" (x{self.measured_speedup:.2f} measured)"
+        return s
+
+
+_HIT_KEYS_KEPT = 64
+
+
+@dataclass
+class AutotuneStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    tunes: int = 0
+    # most recent hit keys only (bounded: a serving process does one
+    # lookup per tuned kernel call and must not accumulate forever)
+    hit_keys: List[str] = field(default_factory=list)
+
+    def record_hit(self, key: str) -> None:
+        self.hits += 1
+        self.hit_keys.append(key)
+        if len(self.hit_keys) > _HIT_KEYS_KEPT:
+            del self.hit_keys[:-_HIT_KEYS_KEPT]
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"lookups": self.lookups, "hits": self.hits,
+                "misses": self.misses, "tunes": self.tunes}
+
+
+class Autotuner:
+    """Cost-model-guided kernel autotuner with a persistent cache.
+
+    ``cost_model`` defaults to the shipped ``tpu_v5e`` calibration;
+    ``cache=None`` means a private in-memory cache (pass a
+    :class:`TuningCache` to persist/share).  ``measure=True`` turns on
+    stage-2 refinement (needs a backend jax can run kernels on —
+    interpret mode off-TPU, so it works anywhere, slowly).
+    """
+
+    def __init__(self, cost_model=None, cache: Optional[TuningCache] = None,
+                 *, dtype: str = "bf16", measure: bool = False,
+                 top_k: int = 3, device_kind: Optional[str] = None,
+                 measure_iters: int = 5, measure_warmup: int = 2,
+                 allow_low_precision: bool = False):
+        if cost_model is None:
+            from repro.core.costmodel import CostModel
+            cost_model = CostModel.from_named("tpu_v5e")
+        self.cost_model = cost_model
+        self.cache = cache if cache is not None else TuningCache(None)
+        self.dtype = canon_dtype(dtype)
+        self.measure = measure
+        self.top_k = top_k
+        # opt-in: search reduced-precision axes (bf16 flash accumulator)
+        self.allow_low_precision = allow_low_precision
+        self.measure_iters = measure_iters
+        self.measure_warmup = measure_warmup
+        self.device_kind = device_kind or self._default_device_kind()
+        self.stats = AutotuneStats()
+
+    def _default_device_kind(self) -> str:
+        """Analytic tunings are keyed by the modeled hardware (deterministic
+        with no device); measured tunings by the real device kind."""
+        if self.measure:
+            import jax
+            d = jax.devices()[0]
+            return f"{d.platform}-{getattr(d, 'device_kind', d.platform)}" \
+                .replace("|", "/")
+        return f"analytic-{self.cost_model.hw.name}"
+
+    # ----- keys --------------------------------------------------------------
+
+    def key_for(self, kernel: str, shapes: Mapping[str, int],
+                dtype: Optional[str] = None) -> str:
+        tn = get_tunable(kernel)
+        return entry_key(kernel, shape_bucket(tn.normalize_shapes(shapes)),
+                         canon_dtype(dtype or self.dtype),
+                         self.device_kind, self.cost_model.cal.name or "?")
+
+    # ----- read side (the kernel dispatch path) ------------------------------
+
+    def lookup(self, kernel: str, shapes: Mapping[str, int],
+               dtype: Optional[str] = None) -> Optional[Dict[str, Any]]:
+        """Cache-hit config for a concrete problem, else None.  Never
+        tunes implicitly — dispatch must stay O(dict probe).  A kernel
+        with no tunable entry resolves to None; a malformed shape dict for
+        a KNOWN tunable still raises (a typo'd axis must not become a
+        permanent silent miss)."""
+        from repro.core.autotune.space import TUNABLES
+        if kernel not in TUNABLES:
+            return None
+        key = self.key_for(kernel, shapes, dtype)
+        self.stats.lookups += 1
+        entry = self.cache.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self.stats.record_hit(key)
+        return dict(entry["config"])
+
+    def config_for(self, kernel: str, shapes: Mapping[str, int],
+                   dtype: Optional[str] = None) -> Dict[str, Any]:
+        """Tuned config when cached, else the kernel's effective default."""
+        got = self.lookup(kernel, shapes, dtype)
+        if got is not None:
+            return got
+        return get_tunable(kernel).effective_default(shapes)
+
+    # ----- the search --------------------------------------------------------
+
+    def tune(self, kernel: str, shapes: Optional[Mapping[str, int]] = None,
+             dtype: Optional[str] = None) -> TuneResult:
+        """Search one kernel's launch space and persist the winner.
+
+        Whether the top-K gets measured is fixed at construction
+        (``measure=``), NOT per call: the cache's device_kind key component
+        is derived from it, and a per-call override would store
+        wall-time-measured winners under the analytic key (or vice versa)
+        — exactly the cross-device leakage the key exists to prevent."""
+        tn = get_tunable(kernel)
+        shapes_n = tn.normalize_shapes(shapes)
+        dt = canon_dtype(dtype or self.dtype)
+        do_measure = self.measure
+
+        budget = vmem_budget_bytes(self.cost_model.cal, self.cost_model.hw)
+        ranked = self._rank(tn, shapes_n, dt, budget)
+
+        default = tn.effective_default(shapes_n)
+        default_row = next(r for r in ranked if r["config"] == default)
+
+        best_row = ranked[0]
+        measured_best = measured_default = None
+        source = "analytic"
+        if do_measure:
+            shortlist = ranked[:max(self.top_k, 1)]
+            if not any(r["config"] == default for r in shortlist):
+                shortlist = shortlist + [default_row]
+            for row in shortlist:
+                row["measured_s"] = self._measure(tn, shapes_n, dt,
+                                                  row["config"])
+            best_row = min(shortlist, key=lambda r: r["measured_s"])
+            measured_best = best_row["measured_s"]
+            measured_default = default_row.get("measured_s")
+            source = "measured"
+
+        key = self.key_for(kernel, shapes_n, dt)
+        result = TuneResult(
+            kernel=kernel, shapes=shapes_n, dtype=dt, key=key,
+            ranked=ranked, best=dict(best_row["config"]), default=default,
+            predicted_best_s=best_row["predicted_s"],
+            predicted_default_s=default_row["predicted_s"],
+            measured_best_s=measured_best,
+            measured_default_s=measured_default, source=source)
+        self.cache.put(key, self._entry(result))
+        self.stats.tunes += 1
+        return result
+
+    def tune_all(self, kernels: Optional[List[str]] = None,
+                 shapes: Optional[Mapping[str, Mapping[str, int]]] = None,
+                 dtype: Optional[str] = None) -> Dict[str, TuneResult]:
+        """Tune every (or the named) tunable kernel; per-kernel shape
+        overrides come from ``shapes[kernel]``."""
+        out = {}
+        for name in (kernels or tunable_names()):
+            out[name] = self.tune(name, (shapes or {}).get(name),
+                                  dtype=dtype)
+        return out
+
+    # ----- internals ---------------------------------------------------------
+
+    def _rank(self, tn: Tunable, shapes: Dict[str, int], dtype: str,
+              budget: float) -> List[Dict[str, Any]]:
+        rows = []
+        for cand in tn.candidates(
+                shapes, dtype, budget,
+                allow_low_precision=self.allow_low_precision):
+            census = dict(tn.census(shapes, cand, dtype))
+            mxu_shape = census.pop("mxu_shape", None)
+            pred = self.cost_model.predict(census, dtype=dtype,
+                                           mxu_shape=mxu_shape)
+            rows.append({
+                "config": dict(cand),
+                "predicted_s": pred.step_s,
+                "bottleneck": pred.bottleneck,
+                "issue_overhead_s": pred.issue_overhead_s,
+                "vmem_bytes": tn.vmem_bytes(shapes, cand, dtype),
+            })
+        # total, reproducible order: time then canonical config JSON
+        rows.sort(key=lambda r: (r["predicted_s"],
+                                 json.dumps(r["config"], sort_keys=True)))
+        return rows
+
+    def _measure(self, tn: Tunable, shapes: Dict[str, int], dtype: str,
+                 config: Dict[str, Any]) -> float:
+        from repro.core.microbench.harness import time_fn
+        fn, args = _example_call(tn.name, shapes, dtype, config)
+        return time_fn(fn, *args, iters=self.measure_iters,
+                       warmup=self.measure_warmup)
+
+    def _entry(self, res: TuneResult) -> Dict[str, Any]:
+        return {
+            "kernel": res.kernel,
+            "shapes": dict(res.shapes),
+            "dtype": res.dtype,
+            "device_kind": self.device_kind,
+            "calibration_id": self.cost_model.cal.name or "?",
+            "config": dict(res.best),
+            "default_config": dict(res.default),
+            "predicted_s": res.predicted_best_s,
+            "predicted_default_s": res.predicted_default_s,
+            "measured_s": res.measured_best_s,
+            "measured_default_s": res.measured_default_s,
+            "predicted_speedup": res.predicted_speedup,
+            "source": res.source,
+            "n_candidates": len(res.ranked),
+            "candidates": [
+                {k: v for k, v in row.items()}
+                for row in res.ranked[:_ENTRY_ROWS]],
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        }
+
+
+# ---------------------------------------------------------------------------
+# measured-stage example calls (jax imported here only — the analytic path
+# never touches it)
+# ---------------------------------------------------------------------------
+
+def _example_call(kernel: str, shapes: Dict[str, int], dtype: str,
+                  config: Dict[str, Any]):
+    import functools
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import kernels as K
+
+    jdt = {"f32": jnp.float32, "bf16": jnp.bfloat16,
+           "f16": jnp.float16}.get(dtype, jnp.float32)
+    rng = np.random.default_rng(0)
+    n = lambda *s: jnp.asarray(rng.normal(size=s) * 0.3, jdt)
+
+    if kernel == "flash_attention":
+        B, Sq, Skv = shapes["batch"], shapes["seq_q"], shapes["seq_kv"]
+        H, KH, D = shapes["heads"], shapes["kv_heads"], shapes["head_dim"]
+        args = (n(B, Sq, H, D), n(B, Skv, KH, D), n(B, Skv, KH, D))
+        return functools.partial(K.flash_attention, config=config), args
+    if kernel == "ssm_scan":
+        B, S = shapes["batch"], shapes["seq"]
+        Di, N = shapes["d_inner"], shapes["state_dim"]
+        args = (n(B, S, Di),
+                jnp.asarray(rng.uniform(1e-3, 0.1, (B, S, Di)), jdt),
+                n(B, S, N), n(B, S, N),
+                -jnp.abs(jnp.asarray(rng.normal(size=(Di, N)), jnp.float32)))
+        return functools.partial(K.ssm_scan, config=config), args
+    if kernel == "wkv6":
+        B, S = shapes["batch"], shapes["seq"]
+        H, N = shapes["heads"], shapes["head_dim"]
+        args = (n(B, S, H, N), n(B, S, H, N), n(B, S, H, N),
+                jnp.asarray(rng.uniform(0.7, 0.999, (B, S, H, N)), jdt),
+                n(H, N))
+        return functools.partial(K.wkv6, config=config), args
+    if kernel == "mxu_probe":
+        M, Kk, N = shapes["m"], shapes["k"], shapes["n"]
+        args = (n(M, Kk), n(Kk, N))
+        return functools.partial(K.mxu_probe, chain=1, config=config), args
+    raise KeyError(f"no example call for kernel {kernel!r}")

@@ -13,6 +13,9 @@ arXiv:2208.11174) onto this backend's measurement primitives:
                                dispatch overhead) that anchor the perf model
   * ``isa_mapping``          - Table V: source -> optimized instruction
                                expansion per op class (the PTX->SASS map)
+  * ``autotune``             - the tables applied: cost-model-guided launch
+                               configs per tunable kernel (predicted best
+                               vs default, optional measured refinement)
 
 Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
 dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
@@ -154,6 +157,46 @@ ISA_CASES = ("add.f32", "mul.f32", "fma.f32", "div.f32", "rsqrt.f32",
              "reduce.f32", "gather", "scan8")
 
 
+def run_autotune_cell(params: Dict[str, Any], quick: bool = False
+                      ) -> Dict[str, Any]:
+    """Tune one kernel's launch space: analytic ranking always (pure cost
+    model, runs on CPU), measured top-K refinement when mode='measured'
+    (interpret-mode kernels off-TPU — slow but true wall time)."""
+    from repro.core.autotune import Autotuner
+    from repro.core.costmodel import CostModel
+
+    measured = params.get("mode", "analytic") == "measured"
+    tuner = Autotuner(CostModel.from_named(params.get("calibration",
+                                                      "tpu_v5e")),
+                      measure=measured, top_k=2 if quick else 3)
+    shapes = None
+    if quick or measured:
+        # small problems keep interpret-mode timing (and CI) tractable
+        shapes = {
+            "flash_attention": {"batch": 1, "seq_q": 128, "seq_kv": 128,
+                                "heads": 2, "kv_heads": 1, "head_dim": 64},
+            "ssm_scan": {"batch": 1, "seq": 64, "d_inner": 256,
+                         "state_dim": 8},
+            "wkv6": {"batch": 1, "seq": 64, "heads": 4, "head_dim": 32},
+            "mxu_probe": {"m": 256, "k": 256, "n": 256},
+        }[params["kernel"]]
+    res = tuner.tune(params["kernel"], shapes, dtype=params["dtype"])
+    out = {
+        "best_config": dict(res.best),
+        "default_config": dict(res.default),
+        "predicted_best_s": res.predicted_best_s,
+        "predicted_default_s": res.predicted_default_s,
+        "predicted_speedup": res.predicted_speedup,
+        "n_candidates": len(res.ranked),
+        "cache_key": res.key,
+    }
+    if res.measured_best_s is not None:
+        out["measured_best_s"] = res.measured_best_s
+        if res.measured_speedup is not None:
+            out["measured_speedup"] = res.measured_speedup
+    return out
+
+
 # ---------------------------------------------------------------------------
 # grids
 # ---------------------------------------------------------------------------
@@ -253,6 +296,23 @@ register(Experiment(
     runner=run_roofline_cal_cell,
     cost_per_cell_s=5.0,
     tags=("roofline", "calibration"),
+))
+
+register(Experiment(
+    name="autotune",
+    description="cost-model-guided kernel autotuning: ranked launch "
+                "configs per tunable Pallas kernel (analytic; 'measured' "
+                "adds the top-K wall-time refinement stage)",
+    grid={"kernel": ("flash_attention", "ssm_scan", "wkv6", "mxu_probe"),
+          "dtype": ("bf16",),
+          "mode": ("analytic", "measured")},
+    quick_grid={"kernel": ("flash_attention", "ssm_scan", "wkv6",
+                           "mxu_probe"),
+                "dtype": ("bf16",),
+                "mode": ("analytic",)},
+    runner=run_autotune_cell,
+    cost_per_cell_s=6.0,
+    tags=("autotune", "costmodel"),
 ))
 
 register(Experiment(

@@ -94,12 +94,33 @@ def roofline_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def autotune_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Tuning outcomes from an ``autotune`` result file: predicted (and,
+    for measured cells, wall-time) best config + speedup over default."""
+    import json as _json
+
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        derived = (f"best={_json.dumps(m['best_config'], sort_keys=True)};"
+                   f"default_s={m['predicted_default_s']:.3e};"
+                   f"speedup={m['predicted_speedup']:.2f};"
+                   f"candidates={m['n_candidates']}")
+        if "measured_best_s" in m:
+            derived += f";measured_s={m['measured_best_s']:.3e}"
+            if "measured_speedup" in m:
+                derived += f";measured_speedup={m['measured_speedup']:.2f}"
+        rows.append((f"autotune/{p['kernel']}.{p['dtype']}.{p['mode']}",
+                     m["predicted_best_s"] * 1e6, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
     "memory_chase": memory_table,
     "isa_mapping": isa_table,
     "roofline_calibration": roofline_table,
+    "autotune": autotune_table,
 }
 
 

@@ -127,17 +127,22 @@ class CostModel:
                 spec: Optional[HardwareSpec] = None, *,
                 mem_bytes: Optional[float] = None,
                 dtype: str = "bf16",
-                dependent: bool = False) -> Prediction:
+                dependent: bool = False,
+                mxu_shape: Optional[tuple] = None) -> Prediction:
         """Price one per-device step from an instruction census.
 
         ``census`` is the dict from ``hlo_census.census`` (or an analytic
         stand-in with the same keys).  ``mem_bytes`` overrides the census
         HBM-byte estimate with an analytic lower bound when available;
-        ``spec`` overrides the hardware the collective term prices against.
+        ``spec`` overrides the hardware the collective term prices against;
+        ``mxu_shape`` routes the compute term through a specific measured
+        (m,n,k) tile point when the calibration has one (the autotuner's
+        per-candidate tile) instead of the dtype peak.
         """
         hw = spec or self.hw
         flops = float(census.get("flops", 0.0))
-        compute_s = self.mxu.time_for_flops(flops, dtype=dtype)
+        compute_s = self.mxu.time_for_flops(flops, dtype=dtype,
+                                            shape=mxu_shape)
         nbytes = float(mem_bytes if mem_bytes is not None
                        else census.get("hbm_bytes", 0.0))
         memory_s = self.memory.transfer_seconds(nbytes)

@@ -1,1 +1,22 @@
-from repro.kernels import ops, ref  # noqa
+"""Public kernel entry points.
+
+``from repro.kernels import flash_attention`` resolves to the jit'd,
+config-dispatching wrapper in ``ops`` (interpret-mode on CPU, Mosaic on
+TPU); ``ref`` holds the pure-jnp oracles.  ``KERNELS`` maps kernel names to
+entry points so the autotuner (``repro.core.autotune``) can enumerate and
+invoke tunables by name.
+"""
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (KERNEL_DEFAULTS, alu_chain,  # noqa: F401
+                               flash_attention, mxu_probe, pointer_chase,
+                               resolve_kernel_config, ssm_scan, wkv6)
+
+# name -> public entry point (the autotuner's enumeration surface)
+KERNELS = {
+    "flash_attention": flash_attention,
+    "ssm_scan": ssm_scan,
+    "wkv6": wkv6,
+    "mxu_probe": mxu_probe,
+    "alu_chain": alu_chain,
+    "pointer_chase": pointer_chase,
+}

@@ -4,11 +4,16 @@ TPU adaptation of the memory-bounded attention the framework's jnp path
 emulates: Q is tiled over the grid, K/V stream through VMEM in blocks, and
 the online-softmax running (m, l, acc) state lives in VMEM scratch — the
 HBM->VMEM->MXU pipeline replaces the GPU's gmem->smem->TC staging.  Block
-shapes default to MXU-aligned (128 x head_dim).
+shapes default to MXU-aligned (128 x head_dim) and are the autotuner's
+primary search axes (``repro.core.autotune``), together with the
+accumulator dtype.
 
 Supports causal masking, sliding windows, logit softcaps and GQA (the KV
 head for a query head is resolved in the BlockSpec index_map, so no repeated
-KV is materialized).
+KV is materialized).  Sequences that do not divide the block shapes are
+padded to the next block boundary: padded KV positions carry ``k_pos >=
+seq_kv`` and are masked to -inf, padded query rows are sliced off the
+output, so ragged tails cost one partial block instead of an assert.
 """
 from __future__ import annotations
 
@@ -20,17 +25,21 @@ from jax.experimental import pallas as pl
 
 NEG_INF = -2.0e38
 
+# accumulator dtype names accepted by the `acc_dtype` tunable
+ACC_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
 
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window, softcap,
-               block_q, block_k, seq_kv):
+               block_q, block_k, seq_kv, acc_dtype):
     qi = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
-    m = jnp.full((block_q,), NEG_INF, jnp.float32)
-    l = jnp.zeros((block_q,), jnp.float32)
-    acc = jnp.zeros((block_q, q.shape[-1]), jnp.float32)
+    m = jnp.full((block_q,), NEG_INF, acc_dtype)
+    l = jnp.zeros((block_q,), acc_dtype)
+    acc = jnp.zeros((block_q, q.shape[-1]), acc_dtype)
 
     q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
-    n_blocks = seq_kv // block_k
+    padded_kv = k_ref.shape[2]
+    n_blocks = padded_kv // block_k
 
     def body(j, carry):
         m, l, acc = carry
@@ -40,17 +49,20 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window, softcap,
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
-        mask = jnp.ones((block_q, block_k), bool)
+        # padded tail slots (k_pos >= seq_kv) never attend
+        mask = k_pos[None, :] < seq_kv
         if causal:
             mask &= k_pos[None, :] <= q_pos[:, None]
         if window is not None:
             mask &= (q_pos[:, None] - k_pos[None, :]) < window
         s = jnp.where(mask, s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
-        acc_new = acc * alpha[:, None] + p @ v
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(acc_dtype))
+        p = jnp.exp(s - m_new[:, None].astype(jnp.float32))
+        alpha = jnp.exp((m - m_new).astype(jnp.float32))
+        l_new = l * alpha.astype(acc_dtype) \
+            + jnp.sum(p, axis=-1).astype(acc_dtype)
+        acc_new = acc * alpha[:, None].astype(acc_dtype) \
+            + (p @ v).astype(acc_dtype)
         return m_new, l_new, acc_new
 
     upper = n_blocks
@@ -60,40 +72,59 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window, softcap,
                             + (1 if block_q % block_k else 0))
         upper = jnp.maximum(upper, 1)
     m, l, acc = jax.lax.fori_loop(0, upper, body, (m, l, acc))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    out = acc.astype(jnp.float32) \
+        / jnp.maximum(l.astype(jnp.float32), 1e-30)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
-                    scale=None, block_q=128, block_k=128, interpret=False):
+                    scale=None, block_q=128, block_k=128, acc_dtype="f32",
+                    interpret=False):
     """q [B,Sq,H,D]; k,v [B,Skv,KH,D] -> [B,Sq,H,D]."""
     B, Sq, H, D = q.shape
     _, Skv, KH, _ = k.shape
     scale = scale if scale is not None else D ** -0.5
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Skv)
-    assert Sq % block_q == 0 and Skv % block_k == 0, "pad sequences first"
+    block_q = max(min(block_q, Sq), 1)
+    block_k = max(min(block_k, Skv), 1)
+    if acc_dtype not in ACC_DTYPES:
+        raise ValueError(f"acc_dtype must be one of {sorted(ACC_DTYPES)}, "
+                         f"got {acc_dtype!r}")
     group = H // KH
+
+    # ragged tails: pad sequences to the next block boundary.  Padded KV
+    # slots are masked inside the kernel (k_pos >= Skv); padded query rows
+    # compute garbage that is sliced off below.
+    pad_q = -Sq % block_q
+    pad_k = -Skv % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
 
     qt = jnp.moveaxis(q, 2, 1)                            # [B,H,Sq,D]
     kt = jnp.moveaxis(k, 2, 1)                            # [B,KH,Skv,D]
     vt = jnp.moveaxis(v, 2, 1)
 
-    grid = (B, H, Sq // block_q)
+    grid = (B, H, Sq_p // block_q)
     out = pl.pallas_call(
         functools.partial(_fa_kernel, scale=scale, causal=causal,
                           window=window, softcap=softcap, block_q=block_q,
-                          block_k=block_k, seq_kv=Skv),
+                          block_k=block_k, seq_kv=Skv,
+                          acc_dtype=ACC_DTYPES[acc_dtype]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, Skv, D),
+            pl.BlockSpec((1, 1, Skv_p, D),
                          lambda b, h, i, g=group: (b, h // g, 0, 0)),
-            pl.BlockSpec((1, 1, Skv, D),
+            pl.BlockSpec((1, 1, Skv_p, D),
                          lambda b, h, i, g=group: (b, h // g, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, D),
                                lambda b, h, i: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
         interpret=interpret,
     )(qt, kt, vt)
-    return jnp.moveaxis(out, 1, 2)
+    out = jnp.moveaxis(out, 1, 2)
+    return out[:, :Sq] if pad_q else out

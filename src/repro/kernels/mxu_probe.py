@@ -28,8 +28,14 @@ def mxu_probe(a, b, *, chain=4, block=(128, 128), interpret=False):
     cell with the full K panel in VMEM."""
     M, K = a.shape
     _, N = b.shape
-    bm, bn = (min(block[0], M), min(block[1], N))
-    assert M % bm == 0 and N % bn == 0
+    bm, bn = (max(min(block[0], M), 1), max(min(block[1], N), 1))
+    # the tile IS the measured quantity: a silently rewritten block would
+    # label a measurement with a shape that never ran.  (The tuned-dispatch
+    # wrapper in ops.py divisor-clamps cache-resolved blocks before calling.)
+    if M % bm or N % bn:
+        raise ValueError(
+            f"mxu_probe block ({bm}, {bn}) must divide the problem "
+            f"({M}, {N})")
     if chain > 1:
         assert M == K, "a dependent chain needs square A (C <- A @ C)"
     if (bm, bn) != (M, N):

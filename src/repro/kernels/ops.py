@@ -1,8 +1,16 @@
-"""Jit'd public wrappers for all Pallas kernels.
+"""Jit'd public wrappers for all Pallas kernels, plus the tuned-config
+dispatch path.
 
 ``interpret`` defaults to True off-TPU so the same call sites work in CPU
 tests (interpret mode executes the kernel body in Python — correctness, not
-speed) and compile to Mosaic on real TPUs."""
+speed) and compile to Mosaic on real TPUs.
+
+Launch configuration resolves in precedence order: explicit kwarg >
+``config=`` mapping > autotuner cache lookup (``tuned=True`` consults the
+installed ``repro.core.autotune`` handle) > the MXU-aligned default.  The
+resolution happens OUTSIDE jit (each wrapper is a plain function over a
+jitted inner), so tuned values become ordinary static arguments and the
+lookup costs one dict probe per call."""
 from __future__ import annotations
 
 import functools
@@ -10,37 +18,95 @@ import functools
 import jax
 import jax.numpy as jnp
 
+# the single source of launch-config defaults and divisor clamping
+# (space.py is jax-free, so this does not drag accelerators into
+# analytic paths)
+from repro.core.autotune.space import TUNABLES, divisor_clamp
 from repro.kernels import (flash_attention as _fa, microbench_alu as _alu,
                            microbench_chase as _chase, mxu_probe as _mxu,
                            ssm_scan as _ssm, wkv6 as _wkv)
+
+# kernel name -> default launch config (the pre-autotuner hardcoded values)
+KERNEL_DEFAULTS = {name: dict(t.default_config)
+                   for name, t in TUNABLES.items()}
 
 
 def _default_interpret():
     return jax.default_backend() != "tpu"
 
 
+def resolve_kernel_config(kernel, shapes, dtype, *, config=None, tuned=False,
+                          explicit=None):
+    """The dispatch-path resolver: explicit kwargs > ``config`` mapping >
+    installed-autotuner cache hit > defaults.  Returns a complete plain
+    dict of launch parameters for ``kernel``."""
+    out = dict(KERNEL_DEFAULTS[kernel])
+    if config is None and tuned:
+        from repro.core.autotune import tuned_config
+        config = tuned_config(kernel, shapes, str(jnp.dtype(dtype).name))
+    if config:
+        out.update({k: config[k] for k in out if k in config})
+    if explicit:
+        out.update({k: v for k, v in explicit.items() if v is not None})
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "scale", "block_q", "block_k",
-                                             "interpret"))
-def flash_attention(q, k, v, causal=True, window=None, softcap=None,
-                    scale=None, block_q=128, block_k=128, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+                                             "acc_dtype", "interpret"))
+def _fa_jit(q, k, v, causal, window, softcap, scale, block_q, block_k,
+            acc_dtype, interpret):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale, block_q=block_q,
-                               block_k=block_k, interpret=interpret)
+                               block_k=block_k, acc_dtype=acc_dtype,
+                               interpret=interpret)
+
+
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, block_q=None, block_k=None, acc_dtype=None,
+                    config=None, tuned=False, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shapes = {"batch": q.shape[0], "seq_q": q.shape[1],
+              "seq_kv": k.shape[1], "heads": q.shape[2],
+              "kv_heads": k.shape[2], "head_dim": q.shape[3]}
+    c = resolve_kernel_config(
+        "flash_attention", shapes, q.dtype, config=config, tuned=tuned,
+        explicit={"block_q": block_q, "block_k": block_k,
+                  "acc_dtype": acc_dtype})
+    return _fa_jit(q, k, v, causal, window, softcap, scale,
+                   int(c["block_q"]), int(c["block_k"]),
+                   str(c["acc_dtype"]), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def ssm_scan(x, dt, B, C, A, block_d=256, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _ssm_jit(x, dt, B, C, A, block_d, interpret):
     return _ssm.ssm_scan(x, dt, B, C, A, block_d=block_d,
                          interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def wkv6(r, k, v, w, u, interpret=None):
+def ssm_scan(x, dt, B, C, A, block_d=None, config=None, tuned=False,
+             interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _wkv.wkv6(r, k, v, w, u, interpret=interpret)
+    shapes = {"batch": x.shape[0], "seq": x.shape[1],
+              "d_inner": x.shape[2], "state_dim": A.shape[1]}
+    c = resolve_kernel_config("ssm_scan", shapes, x.dtype, config=config,
+                              tuned=tuned, explicit={"block_d": block_d})
+    return _ssm_jit(x, dt, B, C, A, int(c["block_d"]), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def _wkv_jit(r, k, v, w, u, block_h, interpret):
+    return _wkv.wkv6(r, k, v, w, u, block_h=block_h, interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, block_h=None, config=None, tuned=False,
+         interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shapes = {"batch": r.shape[0], "seq": r.shape[1],
+              "heads": r.shape[2], "head_dim": r.shape[3]}
+    c = resolve_kernel_config("wkv6", shapes, r.dtype, config=config,
+                              tuned=tuned, explicit={"block_h": block_h})
+    return _wkv_jit(r, k, v, w, u, int(c["block_h"]), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("op", "length", "dependent",
@@ -58,7 +124,26 @@ def pointer_chase(nxt, start, hops=1024, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("chain", "block", "interpret"))
-def mxu_probe(a, b, chain=4, block=(128, 128), interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _mxu_jit(a, b, chain, block, interpret):
     return _mxu.mxu_probe(a, b, chain=chain, block=block,
                           interpret=interpret)
+
+
+def mxu_probe(a, b, chain=4, block=None, config=None, tuned=False,
+              interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shapes = {"m": a.shape[0], "k": a.shape[1], "n": b.shape[1]}
+    explicit = None
+    if block is not None:
+        explicit = {"block_m": block[0], "block_n": block[1]}
+    c = resolve_kernel_config("mxu_probe", shapes, a.dtype, config=config,
+                              tuned=tuned, explicit=explicit)
+    bm, bn = int(c["block_m"]), int(c["block_n"])
+    if block is None:
+        # config/cache-resolved blocks are perf hints (a bucketed cache
+        # entry may not divide this exact problem): clamp to a divisor.
+        # An EXPLICIT block= stays strict in the kernel — for measurement
+        # callers the tile is the measured quantity itself.
+        bm = divisor_clamp(bm, shapes["m"])
+        bn = divisor_clamp(bn, shapes["n"])
+    return _mxu_jit(a, b, chain, (bm, bn), interpret)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.autotune.space import divisor_clamp
+
 
 def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, *, seq):
     A = a_ref[...].astype(jnp.float32)                    # [bd, N]
@@ -35,11 +37,14 @@ def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, *, seq):
 
 
 def ssm_scan(x, dt, B, C, A, *, block_d=256, interpret=False):
-    """x,dt [Bt,S,Di]; B,C [Bt,S,N]; A [Di,N] -> y [Bt,S,Di]."""
+    """x,dt [Bt,S,Di]; B,C [Bt,S,N]; A [Di,N] -> y [Bt,S,Di].
+
+    ``block_d`` (the autotuner's channel-tile axis) is clamped to the
+    largest common divisor of d_inner so any candidate launches cleanly.
+    """
     Bt, S, Di = x.shape
     N = A.shape[1]
-    block_d = min(block_d, Di)
-    assert Di % block_d == 0
+    block_d = divisor_clamp(block_d, Di)
     grid = (Bt, Di // block_d)
     return pl.pallas_call(
         functools.partial(_ssm_kernel, seq=S),

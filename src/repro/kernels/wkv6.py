@@ -1,9 +1,15 @@
 """RWKV6 (Finch) WKV recurrence kernel (TPU Pallas).
 
-Per (batch, head): state S in R^{N x N} lives in VMEM scratch for the whole
-sequence; each step reads r,k,v,w rows ([N] each) and writes one y row.
+Per (batch, head-block): state S in R^{bh x N x N} lives in VMEM scratch for
+the whole sequence; each step reads r,k,v,w rows ([bh, N] each) and writes
+one y row.
 
   y_t = r_t . (S + diag(u) k_t v_t^T);   S <- diag(w_t) S + k_t v_t^T
+
+``block_h`` is the autotuner's grid-factorization axis: one kernel instance
+carries ``block_h`` heads' state (more VMEM, fewer grid cells / less issue
+overhead).  A ``block_h`` that does not divide the head count is clamped to
+the largest common divisor, so any candidate is safe to launch.
 
 The paper-relevant property: this is an *element-wise/outer-product* (VPU)
 workload with a long serial dependence — exactly the instruction class whose
@@ -16,35 +22,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.autotune.space import divisor_clamp
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, *, seq):
-    u = u_ref[0].astype(jnp.float32)                      # [N]
-    N = u.shape[0]
-    s0 = jnp.zeros((N, N), jnp.float32)
+    u = u_ref[...].astype(jnp.float32)                    # [bh, N]
+    bh, N = u.shape
+    s0 = jnp.zeros((bh, N, N), jnp.float32)
 
     def step(t, s):
-        r = r_ref[0, t, 0].astype(jnp.float32)            # [N]
-        k = k_ref[0, t, 0].astype(jnp.float32)
-        v = v_ref[0, t, 0].astype(jnp.float32)
-        w = w_ref[0, t, 0].astype(jnp.float32)
-        kv = k[:, None] * v[None, :]                      # [N, N]
-        y = r @ (s + u[:, None] * kv)                     # [N]
-        y_ref[0, t, 0] = y.astype(y_ref.dtype)
-        return w[:, None] * s + kv
+        r = r_ref[0, t].astype(jnp.float32)               # [bh, N]
+        k = k_ref[0, t].astype(jnp.float32)
+        v = v_ref[0, t].astype(jnp.float32)
+        w = w_ref[0, t].astype(jnp.float32)
+        kv = k[:, :, None] * v[:, None, :]                # [bh, N, N]
+        y = jnp.einsum("gi,gij->gj", r, s + u[:, :, None] * kv)   # [bh, N]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return w[:, :, None] * s + kv
 
     jax.lax.fori_loop(0, seq, step, s0)
 
 
-def wkv6(r, k, v, w, u, *, interpret=False):
+def wkv6(r, k, v, w, u, *, block_h=1, interpret=False):
     """r,k,v,w [B,S,H,N]; u [H,N] -> y [B,S,H,N]."""
     B, S, H, N = r.shape
-    grid = (B, H)
-    spec = pl.BlockSpec((1, S, 1, N), lambda b, h: (b, 0, h, 0))
+    block_h = divisor_clamp(block_h, H)
+    grid = (B, H // block_h)
+    spec = pl.BlockSpec((1, S, block_h, N), lambda b, h: (b, 0, h, 0))
     return pl.pallas_call(
         functools.partial(_wkv_kernel, seq=S),
         grid=grid,
         in_specs=[spec, spec, spec, spec,
-                  pl.BlockSpec((1, N), lambda b, h: (h, 0))],
+                  pl.BlockSpec((block_h, N), lambda b, h: (h, 0))],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
         interpret=interpret,

@@ -246,19 +246,27 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
         causal = True
 
     Hp = cfg.padded_heads
+    # is_global is usually a traced scalar (the layer scan carries the
+    # local/global pattern as data); the kernel needs a STATIC window, so
+    # the pallas path applies when the window question is static: either
+    # is_global is a python bool, or the config has no window at all.
+    static_global = isinstance(is_global, bool)
     use_pallas = (
         cfg.use_pallas and cache is None and not cross
         and Hp == cfg.n_heads and cfg.n_heads % max(cfg.n_kv_heads, 1) == 0
-        and cfg.meta_tokens == 0 and isinstance(is_global, bool)
-        and q.shape[1] % min(128, q.shape[1]) == 0)
+        and cfg.meta_tokens == 0
+        and (static_global or cfg.window is None))
     if use_pallas:
-        # TPU hot path: the blocked flash kernel (kernels/flash_attention)
+        # TPU hot path: the blocked flash kernel (kernels/flash_attention);
+        # ragged sequence tails are padded+masked inside the kernel.
+        # tuned=True resolves block_q/block_k/acc_dtype from the installed
+        # autotuner's cache (repro.core.autotune); without one the kernel's
+        # MXU-aligned defaults apply.
         from repro.kernels import ops as kops
+        window = cfg.window if static_global and not is_global else None
         out_h = kops.flash_attention(
-            q, k, v, causal=causal,
-            window=None if is_global else cfg.window,
-            softcap=cfg.attn_softcap, scale=scale,
-            block_q=min(128, q.shape[1]), block_k=min(128, k.shape[1]))
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_softcap, scale=scale, tuned=True)
     else:
         out_h = attend(q, k, v, positions, kpos, scale=scale, causal=causal,
                        window=None if cross else cfg.window,

@@ -84,12 +84,13 @@ def _ssm_scan_ref(xc, dt, B, C, A, h0, chunk=256):
     return jnp.moveaxis(ys, 0, 1), hT
 
 
-def mamba_mixer(p, x, cfg, state=None):
+def mamba_mixer(p, x, cfg, state=None, need_state=True):
     """x [Bt,S,D] -> (y_pre [Bt,S,di], new_state).
 
     state (decode): {'conv': [Bt,W-1,di], 'h': [Bt,di,N]} or None (train).
     y_pre is the pre-output-projection SSM path (gated), to be fused with the
-    attention path by the trunk.
+    attention path by the trunk.  With ``need_state=False`` (training: the
+    returned hT is never consumed) the Pallas kernel path applies.
     """
     s = cfg.ssm
     cdt = x.dtype
@@ -121,7 +122,15 @@ def mamba_mixer(p, x, cfg, state=None):
     A = -jnp.exp(p["a_log"])                                   # [di,N]
     h0 = (state["h"] if state is not None
           else jnp.zeros((Bt, di, s.state_dim), jnp.float32))
-    y, hT = _ssm_scan_ref(xc, dt, Bm, Cm, A, h0)
+    if cfg.use_pallas and state is None and not need_state:
+        # TPU hot path: VMEM-resident scan state (kernels/ssm_scan); only
+        # valid when hT is never read (train).  tuned=True picks up the
+        # autotuned channel tile (block_d).
+        from repro.kernels import ops as kops
+        y = kops.ssm_scan(xc, dt, Bm, Cm, A, tuned=True)
+        hT = h0
+    else:
+        y, hT = _ssm_scan_ref(xc, dt, Bm, Cm, A, h0)
     y = (y.astype(cdt) + xc * p["d_skip"].astype(cdt)) * act_fn("silu")(z)
     new_state = {"conv": new_conv.astype(jnp.bfloat16), "h": hT}
     return y, new_state

@@ -125,8 +125,9 @@ def rwkv_time_mix(p, x, cfg, state=None, need_state=True):
         # TPU hot path: VMEM-resident WKV state (kernels/wkv6).  Training
         # never reads the final state, so the kernel (which emits only y)
         # applies; prefill needs s_T and stays on the reference scan.
+        # tuned=True picks up the autotuned heads-per-cell factorization.
         from repro.kernels import ops as kops
-        y = kops.wkv6(r, k, v, w, p["u_bonus"].astype(r.dtype))
+        y = kops.wkv6(r, k, v, w, p["u_bonus"].astype(r.dtype), tuned=True)
         sT = s0
     else:
         y, sT = _wkv_scan_ref(r, k, v, w, p["u_bonus"].astype(jnp.float32),

@@ -231,7 +231,8 @@ def _layer(x, lp, *, cfg, positions, is_global, cache_layer, write_pos, mode):
         m_state = state_cache if mode == "decode" else None
         if m_state is not None:
             m_state = {"conv": m_state["conv"], "h": m_state["h"]}
-        s_out, s_new = mamba_mod.mamba_mixer(lp["mamba"], h_in, cfg, m_state)
+        s_out, s_new = mamba_mod.mamba_mixer(lp["mamba"], h_in, cfg, m_state,
+                                             need_state=(mode != "train"))
         # padded dead heads are zero; slice back to the real width so the
         # parallel SSM path (d_inner == n_heads*head_dim) fuses exactly
         real = cfg.n_heads * cfg.head_dim

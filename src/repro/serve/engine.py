@@ -15,6 +15,14 @@ prefills into an engine iteration only while the predicted iteration time
 decode-step latency gates how many prefills ride along, instead of greedily
 stuffing every free slot and stalling in-flight decodes behind a wall of
 prefill compute.
+
+Kernel dispatch is autotuner-aware: pass an ``repro.core.autotune.
+Autotuner`` (with its persistent tuning cache) and the engine installs it
+as the dispatch handle for the duration of each ``step()``, so every
+``tuned=True`` Pallas kernel call inside the model (flash attention in
+prefill, the recurrent scans) resolves its launch config from the tuned
+cache instead of the hardcoded defaults — and two engines with different
+tuners (or none) never leak configs into each other.
 """
 from __future__ import annotations
 
@@ -59,13 +67,19 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512,
                  cost_model: Optional[CostModel] = None,
-                 step_budget_s: Optional[float] = None):
+                 step_budget_s: Optional[float] = None,
+                 autotuner=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.cost_model = cost_model
         self.step_budget_s = step_budget_s
+        # tuned kernel dispatch: the handle is installed for the duration
+        # of each step() so the model's use_pallas hot paths (tuned=True
+        # lookups) hit this engine's cache without leaking a process-global
+        # handle past the engine's own iterations
+        self.autotuner = autotuner
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.stats = EngineStats()
@@ -181,6 +195,13 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine iteration: admit, decode, retire.  Returns #active."""
+        if self.autotuner is not None:
+            from repro.core import autotune as autotune_mod
+            with autotune_mod.using(self.autotuner):
+                return self._step()
+        return self._step()
+
+    def _step(self) -> int:
         t0 = time.perf_counter()
         planned = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]

@@ -35,6 +35,9 @@ class TrainResult:
     events: List
     predicted_step_s: Optional[float] = None   # cost-model verdict
     step_times_s: List[float] = dataclasses.field(default_factory=list)
+    # autotuner verdict: kernel -> launch config resolved for this run's
+    # shapes (tuned cache entry when present, else the kernel default)
+    tuned_configs: Optional[Dict[str, Dict]] = None
 
 
 def train(model: Model, mesh, *, num_steps: int = 50,
@@ -42,12 +45,58 @@ def train(model: Model, mesh, *, num_steps: int = 50,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
           lr: float = 3e-3, seed: int = 0,
           hooks: Optional[List[Callable]] = None,
-          cost_model=None, log_prediction: bool = False) -> TrainResult:
+          cost_model=None, log_prediction: bool = False,
+          autotuner=None) -> TrainResult:
     """Run the training loop; with ``cost_model`` (a ``repro.core.costmodel.
     CostModel``) the compiled step is priced once up front and every step's
     metrics carry ``predicted_step_s`` / ``measured_step_s`` so hooks (and
     ``log_prediction=True`` stdout) can track predicted-vs-measured drift —
-    the paper's close-the-loop validation applied to a live training run."""
+    the paper's close-the-loop validation applied to a live training run.
+
+    ``autotuner`` (a ``repro.core.autotune.Autotuner``) is installed as the
+    process-global tuned-dispatch handle for the duration of the run, so
+    the model's ``use_pallas`` kernels trace with the tuned launch configs
+    from its cache; the loop also resolves (and, with ``log_prediction``,
+    prints) the tuned configs for this run's kernel shapes into
+    ``TrainResult.tuned_configs``.  The previous handle is restored on
+    exit."""
+    from repro.core import autotune as autotune_mod
+    prev_tuner = autotune_mod.install(autotuner) \
+        if autotuner is not None else None
+    try:
+        return _train(model, mesh, num_steps=num_steps,
+                      global_batch=global_batch, seq_len=seq_len,
+                      ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, lr=lr,
+                      seed=seed, hooks=hooks, cost_model=cost_model,
+                      log_prediction=log_prediction, autotuner=autotuner)
+    finally:
+        if autotuner is not None:
+            autotune_mod.install(prev_tuner)
+
+
+def _train_kernel_shapes(cfg, seq_len: int, rows: int) -> Dict[str, Dict]:
+    """The tunable-kernel problem shapes one train microstep presents."""
+    shapes: Dict[str, Dict] = {}
+    if cfg.rwkv:
+        shapes["wkv6"] = {
+            "batch": rows, "seq": seq_len,
+            "heads": cfg.d_model // cfg.rwkv.head_dim,
+            "head_dim": cfg.rwkv.head_dim}
+    else:
+        shapes["flash_attention"] = {
+            "batch": rows, "seq_q": seq_len, "seq_kv": seq_len,
+            "heads": cfg.padded_heads, "kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim}
+    if cfg.ssm:
+        shapes["ssm_scan"] = {
+            "batch": rows, "seq": seq_len, "d_inner": cfg.d_model,
+            "state_dim": cfg.ssm.state_dim}
+    return shapes
+
+
+def _train(model: Model, mesh, *, num_steps, global_batch, seq_len,
+           ckpt_dir, ckpt_every, lr, seed, hooks, cost_model,
+           log_prediction, autotuner=None) -> TrainResult:
     cfg = model.cfg
     optimizer = optim_mod.make_optimizer(cfg.optimizer, lr_peak=lr)
 
@@ -58,6 +107,25 @@ def train(model: Model, mesh, *, num_steps: int = 50,
         jax.set_mesh(mesh)
     psh, osh, bsh, shapes, _ = train_shardings(model, optimizer, mesh, cell)
     accum = accum_steps_for(cfg, global_batch, n_batch_shards(mesh))
+
+    # ----- autotuner: resolve tuned launch configs for this run's shapes ------
+    tuned_configs = None
+    if autotuner is not None:
+        # the jitted step traces GLOBAL microbatch shapes (sharding is a
+        # partitioning detail): one accumulation microstep carries
+        # global_batch // accum rows
+        rows = max(global_batch // accum, 1)
+        # key on the model's compute dtype — the same dtype the in-model
+        # tuned=True dispatch sees on its activations
+        tuned_configs = {
+            kernel: autotuner.config_for(kernel, shapes,
+                                         dtype=cfg.compute_dtype)
+            for kernel, shapes in
+            _train_kernel_shapes(cfg, seq_len, rows).items()}
+        if log_prediction:
+            for kernel, kcfg in tuned_configs.items():
+                print(f"autotune: {kernel} -> {kcfg}")
+
     step_fn = jax.jit(
         make_train_step(model, optimizer, accum, batch_axes(mesh)),
         in_shardings=(psh, osh, bsh), out_shardings=(psh, osh, None),
@@ -133,4 +201,5 @@ def train(model: Model, mesh, *, num_steps: int = 50,
     return TrainResult(num_steps - start_step, losses[-1] if losses else
                        float("nan"), losses, restored_from, runner.events,
                        predicted_step_s=predicted_step_s,
-                       step_times_s=step_times)
+                       step_times_s=step_times,
+                       tuned_configs=tuned_configs)

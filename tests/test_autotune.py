@@ -1,0 +1,488 @@
+"""The autotune subsystem: candidate generation + pruning, deterministic
+analytic ranking for all four tunable kernels, persistent-cache round-trip,
+the tune/show/export CLI, the kernels' config dispatch path, and tuned-config
+numerical equivalence against the ref.py oracles (decode-equivalence
+tolerances)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune
+from repro.core.autotune import (Autotuner, TuningCache, get_tunable,
+                                 shape_bucket, tunable_names)
+from repro.core.autotune.cache import entry_key, split_key, validate
+from repro.core.autotune.cli import main as autotune_main
+from repro.core.costmodel import CostModel
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_global_tuner():
+    """Tests must not leak an installed autotuner into each other."""
+    prev = autotune.install(None)
+    yield
+    autotune.install(prev)
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel.from_named("tpu_v5e")
+
+
+# ---------------------------------------------------------------------------
+# candidate generation
+# ---------------------------------------------------------------------------
+
+def test_candidates_are_aligned_and_deduped():
+    tn = get_tunable("flash_attention")
+    shapes = {"seq_q": 512, "seq_kv": 512}
+    cands = tn.candidates(shapes, "bf16")
+    assert cands
+    seen = set()
+    for c in cands:
+        key = tuple(sorted(c.items()))
+        assert key not in seen
+        seen.add(key)
+        # MXU/VPU-aligned ladder values only, clamped to the problem
+        assert c["block_q"] in (8, 16, 32, 64, 128, 256, 512)
+        assert c["block_k"] in (8, 16, 32, 64, 128, 256, 512)
+
+
+def test_candidates_prune_against_vmem_budget():
+    tn = get_tunable("ssm_scan")
+    shapes = {"batch": 4, "seq": 512, "d_inner": 2048, "state_dim": 16}
+    wide = tn.candidates(shapes, "bf16", budget_bytes=1e12)
+    tight = tn.candidates(shapes, "bf16", budget_bytes=1e5)
+    assert len(tight) < len(wide)
+    # the default config must survive any budget (it is what launches)
+    assert tn.effective_default(shapes) in tight
+
+
+def test_divisor_spaces_always_launchable():
+    tn = get_tunable("wkv6")
+    shapes = {"heads": 12}   # not a power of two
+    for c in tn.candidates(shapes, "bf16"):
+        assert 12 % c["block_h"] == 0
+
+
+def test_unknown_shape_key_is_an_error():
+    with pytest.raises(KeyError):
+        get_tunable("mxu_probe").normalize_shapes({"bogus": 3})
+
+
+def test_lookup_unknown_kernel_vs_bad_shapes(cm):
+    tuner = Autotuner(cm)
+    # non-tunable kernels quietly resolve to None (dispatch fallback) ...
+    assert tuner.lookup("alu_chain", {}) is None
+    # ... but a typo'd axis on a KNOWN tunable stays loud
+    with pytest.raises(KeyError):
+        tuner.lookup("flash_attention", {"seq": 64})
+
+
+def test_low_precision_axis_is_opt_in():
+    tn = get_tunable("flash_attention")
+    shapes = {"seq_q": 256, "seq_kv": 256}
+    default_accs = {c["acc_dtype"] for c in tn.candidates(shapes, "bf16")}
+    assert default_accs == {"f32"}
+    opened = {c["acc_dtype"]
+              for c in tn.candidates(shapes, "bf16",
+                                     allow_low_precision=True)}
+    assert opened == {"f32", "bf16"}
+
+
+# ---------------------------------------------------------------------------
+# analytic search: deterministic, all four kernels, no device
+# ---------------------------------------------------------------------------
+
+def test_analytic_tune_all_four_kernels_ranked(cm):
+    tuner = Autotuner(cm)
+    results = tuner.tune_all()
+    assert sorted(results) == tunable_names()
+    for name, res in results.items():
+        assert res.source == "analytic"
+        assert len(res.ranked) >= 2, name
+        ts = [r["predicted_s"] for r in res.ranked]
+        assert ts == sorted(ts)
+        assert all(t > 0 for t in ts)
+        assert res.predicted_best_s <= res.predicted_default_s
+        assert res.predicted_speedup >= 1.0
+
+
+def test_analytic_tune_is_deterministic(cm):
+    a = Autotuner(cm).tune("flash_attention")
+    b = Autotuner(CostModel.from_named("tpu_v5e")).tune("flash_attention")
+    assert a.best == b.best
+    assert a.key == b.key
+    assert [r["config"] for r in a.ranked] == [r["config"] for r in b.ranked]
+    np.testing.assert_allclose([r["predicted_s"] for r in a.ranked],
+                               [r["predicted_s"] for r in b.ranked])
+
+
+def test_tuning_is_calibration_sensitive_in_the_key(cm):
+    """Two calibrations never share cache entries."""
+    t1 = Autotuner(cm)
+    t2 = Autotuner(CostModel.from_named("ampere_a100"))
+    k1 = t1.key_for("wkv6", {})
+    k2 = t2.key_for("wkv6", {})
+    assert k1 != k2
+    assert split_key(k1)[4] == "tpu_v5e"
+    assert split_key(k2)[4] == "ampere_a100"
+
+
+def test_shape_bucket_rounds_up_to_pow2():
+    assert shape_bucket({"seq": 100, "batch": 2}) == "batch2_seq128"
+    # nearby shapes share a bucket -> one tuning entry serves both
+    assert shape_bucket({"seq": 65}) == shape_bucket({"seq": 128})
+
+
+# ---------------------------------------------------------------------------
+# cache persistence
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trips_losslessly(tmp_path, cm):
+    path = tmp_path / "cache.json"
+    tuner = Autotuner(cm, TuningCache(path))
+    res = tuner.tune("ssm_scan")
+    reloaded = TuningCache(path)
+    assert len(reloaded) == 1
+    entry = reloaded.get(res.key)
+    assert entry is not None
+    assert entry == tuner.cache.get(res.key)
+    assert entry["config"] == res.best
+    # a fresh autotuner over the reloaded cache serves the tuned config
+    fresh = Autotuner(CostModel.from_named("tpu_v5e"), reloaded)
+    assert fresh.lookup("ssm_scan", {}) == res.best
+    assert fresh.stats.hits == 1
+
+
+def test_cache_refuses_newer_schema(tmp_path):
+    p = tmp_path / "cache.json"
+    p.write_text(json.dumps({"kind": "autotune_cache", "version": 99,
+                             "entries": {}}))
+    with pytest.raises(ValueError, match="newer"):
+        TuningCache(p)
+
+
+def test_cache_key_is_five_component(cm):
+    key = entry_key("k", "b", "bf16", "dev", "cal")
+    assert split_key(key) == ("k", "b", "bf16", "dev", "cal")
+    with pytest.raises(ValueError):
+        entry_key("k|bad", "b", "bf16", "dev", "cal")
+    with pytest.raises(ValueError):
+        split_key("only|three|parts")
+
+
+def test_cache_validate_migrates_older_version():
+    doc = validate({"kind": "autotune_cache", "version": 0,
+                    "entries": {"whatever": {}}})
+    assert doc["version"] == 1
+    assert doc["entries"] == {}   # older-version entries are not trusted
+
+
+def test_cache_refuses_non_cache_json(tmp_path):
+    """Pointing --cache at an unrelated JSON artifact must be a loud error,
+    never a silent overwrite."""
+    with pytest.raises(ValueError, match="not an autotune cache"):
+        validate({"entries": {}})
+    p = tmp_path / "host_calibration.json"
+    p.write_text(json.dumps({"ops": {}, "hardware": "cpu"}))
+    with pytest.raises(ValueError, match="not an autotune cache"):
+        TuningCache(p)
+    assert json.loads(p.read_text())["hardware"] == "cpu"   # untouched
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_tune_show_export_round_trip(tmp_path, capsys):
+    cache = str(tmp_path / "cache.json")
+    rc = autotune_main(["tune", "--analytic-only",
+                        "--kernel", "flash_attention", "--cache", cache])
+    assert rc == 0
+    rc = autotune_main(["show", "--kernel", "flash_attention",
+                        "--cache", cache])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "flash_attention|" in out
+    # a kernel that was never tuned: show signals it with rc=1
+    assert autotune_main(["show", "--kernel", "wkv6", "--cache", cache]) == 1
+    exported = tmp_path / "export.json"
+    assert autotune_main(["export", str(exported), "--cache", cache]) == 0
+    doc = json.loads(exported.read_text())
+    assert doc["kind"] == "autotune_cache" and len(doc["entries"]) == 1
+
+
+def test_cli_tune_with_shape_overrides(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    rc = autotune_main(["tune", "--analytic-only", "--kernel", "ssm_scan",
+                        "--shape", "d_inner=512", "--shape", "seq=128",
+                        "--cache", cache])
+    assert rc == 0
+    entries = list(TuningCache(cache).items("ssm_scan"))
+    assert len(entries) == 1
+    assert entries[0][1]["shapes"]["d_inner"] == 512
+
+
+def test_cli_tune_rejects_typoed_shape_axis(tmp_path):
+    """A mistyped --shape axis must error, not silently tune defaults."""
+    with pytest.raises(SystemExit, match="seqq"):
+        autotune_main(["tune", "--analytic-only",
+                       "--kernel", "flash_attention",
+                       "--shape", "seqq=4096",
+                       "--cache", str(tmp_path / "c.json")])
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch path (ops.py): explicit > config > tuned > default
+# ---------------------------------------------------------------------------
+
+def test_resolve_precedence(cm):
+    shapes = {"batch": 1, "seq_q": 64, "seq_kv": 64, "heads": 2,
+              "kv_heads": 1, "head_dim": 16}
+    base = ops.resolve_kernel_config("flash_attention", shapes, jnp.float32)
+    assert base == {"block_q": 128, "block_k": 128, "acc_dtype": "f32"}
+    got = ops.resolve_kernel_config("flash_attention", shapes, jnp.float32,
+                                    config={"block_q": 16, "junk": 1})
+    assert got["block_q"] == 16 and "junk" not in got
+    got = ops.resolve_kernel_config("flash_attention", shapes, jnp.float32,
+                                    config={"block_q": 16},
+                                    explicit={"block_q": 32, "block_k": None})
+    assert got["block_q"] == 32 and got["block_k"] == 128
+
+
+def test_tuned_dispatch_hits_installed_autotuner(cm):
+    shapes = {"batch": 1, "seq_q": 64, "seq_kv": 64, "heads": 2,
+              "kv_heads": 1, "head_dim": 16}
+    tuner = Autotuner(cm, dtype="f32")
+    res = tuner.tune("flash_attention", shapes)
+    with autotune.using(tuner):
+        got = ops.resolve_kernel_config("flash_attention", shapes,
+                                        jnp.float32, tuned=True)
+    assert {k: got[k] for k in res.best} == res.best
+    assert tuner.stats.hits == 1
+    # without an installed tuner, tuned=True degrades to the defaults
+    got = ops.resolve_kernel_config("flash_attention", shapes, jnp.float32,
+                                    tuned=True)
+    assert got["block_q"] == 128
+
+
+# ---------------------------------------------------------------------------
+# tuned configs stay numerically equivalent to the references
+# (odd shapes + both dtypes; decode-equivalence-style tolerances)
+# ---------------------------------------------------------------------------
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 5e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv", [(24, 36), (100, 100), (7, 129)])
+def test_tuned_flash_attention_matches_ref(cm, dtype, sq, skv):
+    shapes = {"batch": 2, "seq_q": sq, "seq_kv": skv, "heads": 4,
+              "kv_heads": 2, "head_dim": 16}
+    best = Autotuner(cm).tune("flash_attention", shapes,
+                              dtype=str(jnp.dtype(dtype).name)).best
+    q = jnp.asarray(RNG.normal(size=(2, sq, 4, 16)), dtype)
+    k = jnp.asarray(RNG.normal(size=(2, skv, 2, 16)), dtype)
+    v = jnp.asarray(RNG.normal(size=(2, skv, 2, 16)), dtype)
+    o = ops.flash_attention(q, k, v, causal=False, config=best)
+    r = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=4 * _tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("di,n", [(96, 8), (256, 16)])
+def test_tuned_ssm_scan_matches_ref(cm, dtype, di, n):
+    shapes = {"batch": 2, "seq": 24, "d_inner": di, "state_dim": n}
+    best = Autotuner(cm).tune("ssm_scan", shapes,
+                              dtype=str(jnp.dtype(dtype).name)).best
+    x = jnp.asarray(RNG.normal(size=(2, 24, di)) * 0.2, dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(2, 24, di)), dtype)
+    Bm = jnp.asarray(RNG.normal(size=(2, 24, n)) * 0.2, dtype)
+    Cm = jnp.asarray(RNG.normal(size=(2, 24, n)) * 0.2, dtype)
+    A = -jnp.abs(jnp.asarray(RNG.normal(size=(di, n)), jnp.float32))
+    o = ops.ssm_scan(x, dt, Bm, Cm, A, config=best)
+    r = ref.ssm_scan_ref(x, dt, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=10 * _tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h", [3, 6])
+def test_tuned_wkv6_matches_ref(cm, dtype, h):
+    N = 16
+    shapes = {"batch": 2, "seq": 20, "heads": h, "head_dim": N}
+    best = Autotuner(cm).tune("wkv6", shapes,
+                              dtype=str(jnp.dtype(dtype).name)).best
+    r_ = jnp.asarray(RNG.normal(size=(2, 20, h, N)) * 0.3, dtype)
+    k_ = jnp.asarray(RNG.normal(size=(2, 20, h, N)) * 0.3, dtype)
+    v_ = jnp.asarray(RNG.normal(size=(2, 20, h, N)) * 0.3, dtype)
+    w_ = jnp.asarray(RNG.uniform(0.7, 0.999, size=(2, 20, h, N)), dtype)
+    u_ = jnp.asarray(RNG.normal(size=(h, N)) * 0.3, dtype)
+    o = ops.wkv6(r_, k_, v_, w_, u_, config=best)
+    rr = ref.wkv6_ref(r_, k_, v_, w_, u_)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(rr, np.float32),
+                               atol=10 * _tol(dtype))
+
+
+def test_bf16_accumulator_stays_within_bf16_tolerance(cm):
+    """The low-precision accumulator axis (opt-in) must still track the
+    reference at bf16 tolerances."""
+    tuner = Autotuner(cm, allow_low_precision=True)
+    shapes = {"batch": 2, "seq_q": 32, "seq_kv": 48, "heads": 2,
+              "kv_heads": 1, "head_dim": 16}
+    res = tuner.tune("flash_attention", shapes)
+    assert any(r["config"]["acc_dtype"] == "bf16" for r in res.ranked)
+    q = jnp.asarray(RNG.normal(size=(2, 32, 2, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 48, 1, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 48, 1, 16)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=False,
+                            config={"block_q": 16, "block_k": 16,
+                                    "acc_dtype": "bf16"})
+    r = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               atol=4 * _tol(jnp.bfloat16))
+
+
+def test_tuned_mxu_probe_matches_ref(cm):
+    shapes = {"m": 128, "k": 128, "n": 96}
+    best = Autotuner(cm).tune("mxu_probe", shapes).best
+    a = jnp.asarray(RNG.normal(size=(128, 128)) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(128, 96)) * 0.1, jnp.float32)
+    o = ops.mxu_probe(a, b, chain=1, config=best)
+    r = ref.mxu_probe_ref(a, b, chain=1)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=5e-4,
+                               rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# measured refinement (tiny problem so interpret mode stays fast)
+# ---------------------------------------------------------------------------
+
+def test_mxu_probe_explicit_block_is_strict_but_tuned_clamps(cm):
+    """An explicit block= is the measured quantity and must not be
+    silently rewritten; a cache/config-resolved block is a perf hint and
+    divisor-clamps so bucketed entries can never crash a dispatch."""
+    a = jnp.asarray(RNG.normal(size=(200, 64)) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(64, 200)) * 0.1, jnp.float32)
+    with pytest.raises(ValueError, match="must divide"):
+        ops.mxu_probe(a, b, chain=1, block=(96, 128))
+    o = ops.mxu_probe(a, b, chain=1, config={"block_m": 512, "block_n": 96})
+    r = ref.mxu_probe_ref(a, b, chain=1)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=5e-4,
+                               rtol=2e-2)
+
+
+def test_kernel_defaults_single_sourced():
+    """ops.KERNEL_DEFAULTS must be the Tunable registry's defaults — the
+    autotuner's 'default' baseline is exactly what dispatch launches."""
+    from repro.core.autotune.space import TUNABLES
+    assert ops.KERNEL_DEFAULTS == {n: t.default_config
+                                   for n, t in TUNABLES.items()}
+
+
+def test_hit_keys_stay_bounded(cm):
+    from repro.core.autotune.search import _HIT_KEYS_KEPT
+    tuner = Autotuner(cm)
+    tuner.tune("wkv6")
+    for _ in range(_HIT_KEYS_KEPT + 40):
+        assert tuner.lookup("wkv6", {}) is not None
+    assert len(tuner.stats.hit_keys) == _HIT_KEYS_KEPT
+    assert tuner.stats.hits == _HIT_KEYS_KEPT + 40
+
+
+def test_measured_refinement_records_wall_time(cm):
+    tuner = Autotuner(cm, measure=True, top_k=2, measure_iters=2,
+                      measure_warmup=1)
+    shapes = {"m": 64, "k": 64, "n": 64}
+    res = tuner.tune("mxu_probe", shapes)
+    assert res.source == "measured"
+    assert res.measured_best_s is not None and res.measured_best_s > 0
+    assert res.measured_default_s is not None
+    assert any("measured_s" in r for r in res.ranked)
+
+
+# ---------------------------------------------------------------------------
+# serve + train consume the tuned cache
+# ---------------------------------------------------------------------------
+
+def test_engine_consumes_tuned_configs(cm):
+    from repro.configs import ARCHS, reduced
+    from repro.models.zoo import build_model
+    from repro.serve.engine import ServingEngine
+
+    # internlm2: no sliding window, so the flash kernel path is static
+    cfg = reduced(ARCHS["internlm2-20b"], n_layers=2, vocab_size=128)
+    model_ref = build_model(cfg)
+    params = model_ref.init(jax.random.PRNGKey(0))
+    model_tuned = build_model(cfg.replace(use_pallas=True))
+
+    prompt = np.arange(5, 13, dtype=np.int32) % cfg.vocab_size
+    tuner = Autotuner(cm, dtype="bf16")
+    # pre-tune the prefill problem the engine will dispatch (batch=1 slot)
+    tuner.tune("flash_attention",
+               {"batch": 1, "seq_q": len(prompt), "seq_kv": len(prompt),
+                "heads": cfg.padded_heads, "kv_heads": cfg.n_kv_heads,
+                "head_dim": cfg.head_dim})
+
+    eng = ServingEngine(model_tuned, params, max_batch=2, max_len=48,
+                        autotuner=tuner)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    eng.run_until_done()
+
+    # the handle is scoped to each step(), never leaked process-globally
+    assert autotune.active() is None
+    assert tuner.stats.lookups > 0
+    assert tuner.stats.hits > 0, "the engine never hit the tuned cache"
+    # tuned dispatch must not change the tokens
+    eng_ref = ServingEngine(build_model(cfg), params, max_batch=2,
+                            max_len=48)
+    rid2 = eng_ref.submit(prompt, max_new_tokens=6)
+    eng_ref.run_until_done()
+    assert eng.done[rid].tokens == eng_ref.done[rid2].tokens
+
+
+def test_train_consumes_tuned_configs_and_restores_handle(cm):
+    from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.zoo import build_model
+    from repro.train.loop import train
+
+    cfg = reduced(ARCHS["internlm2-20b"], n_layers=2, vocab_size=64)
+    model = build_model(cfg)
+    tuner = Autotuner(cm, dtype="bf16")
+    # the train step sees per-microbatch rows: global_batch 4 / accum 2
+    tuned = tuner.tune("flash_attention",
+                       {"batch": 2, "seq_q": 16, "seq_kv": 16,
+                        "heads": cfg.padded_heads,
+                        "kv_heads": cfg.n_kv_heads,
+                        "head_dim": cfg.head_dim})
+    res = train(model, make_host_mesh(), num_steps=2, global_batch=4,
+                seq_len=16, autotuner=tuner)
+    assert res.steps_run == 2
+    # the loop resolved this run's kernel shapes against the tuned cache
+    assert res.tuned_configs == {"flash_attention": tuned.best}
+    assert tuner.stats.hits > 0, "the train loop never hit the tuned cache"
+    assert autotune.active() is None   # handle restored after the run
+
+
+def test_train_without_autotuner_reports_none():
+    from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.zoo import build_model
+    from repro.train.loop import train
+
+    cfg = reduced(ARCHS["internlm2-20b"], n_layers=2, vocab_size=64)
+    res = train(build_model(cfg), make_host_mesh(), num_steps=1,
+                global_batch=4, seq_len=16)
+    assert res.tuned_configs is None

@@ -5,6 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade: property tests skip, the rest run
+    from _hypothesis_stub import given, settings, st
+
 from repro.core.microbench.memory import _random_cycle
 from repro.kernels import ops, ref
 
@@ -62,6 +67,41 @@ def test_wkv6_sweep(dtype, h, n):
     np.testing.assert_allclose(np.asarray(o, np.float32),
                                np.asarray(rr, np.float32),
                                atol=10 * _tol(dtype))
+
+
+@pytest.mark.parametrize("sq,skv,bq,bk", [
+    (12, 13, 8, 8),        # kv tail: 13 % 8 != 0 (the silently-dropped case)
+    (100, 100, 64, 64),    # both tails ragged
+    (5, 9, 128, 128),      # blocks larger than the problem
+    (37, 53, 16, 32),      # coprime everything
+])
+def test_flash_attention_ragged_tails(sq, skv, bq, bk):
+    """seq % block != 0 must pad+mask, not drop the tail (regression: the
+    old kernel computed n_blocks = seq_kv // block_k and lost the rest)."""
+    q = jnp.asarray(RNG.normal(size=(2, sq, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, skv, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, skv, 2, 16)), jnp.float32)
+    for kw in (dict(causal=False), dict(causal=True),
+               dict(causal=True, window=7)):
+        o = ops.flash_attention(q, k, v, block_q=bq, block_k=bk, **kw)
+        r = ref.flash_attention_ref(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(skv=st.integers(1, 70), bk=st.sampled_from([8, 16, 32, 64, 128]),
+       causal=st.booleans())
+def test_flash_attention_kv_boundary_property(skv, bk, causal):
+    """Property: any (seq_kv, block_k) pair matches the reference — the
+    padded tail is masked, never attended, never dropped."""
+    rng = np.random.default_rng(skv * 1000 + bk)
+    sq = max(skv - 2, 1)
+    q = jnp.asarray(rng.normal(size=(1, sq, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, skv, 1, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, skv, 1, 8)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_k=bk)
+    r = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-4)
 
 
 @pytest.mark.parametrize("op", ["add", "mul", "fma", "max", "div", "rsqrt",
