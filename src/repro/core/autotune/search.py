@@ -310,6 +310,17 @@ def _example_call(kernel: str, shapes: Dict[str, int], dtype: str,
         H, KH, D = shapes["heads"], shapes["kv_heads"], shapes["head_dim"]
         args = (n(B, Sq, H, D), n(B, Skv, KH, D), n(B, Skv, KH, D))
         return functools.partial(K.flash_attention, config=config), args
+    if kernel == "paged_attention":
+        B, H = shapes["batch"], shapes["heads"]
+        KH, D, ctx = shapes["kv_heads"], shapes["head_dim"], shapes["ctx"]
+        bs = int(config["block_size"])
+        nb = -(-ctx // bs)                  # dense per-sequence page runs
+        k_pages = n(B * nb, bs, KH, D)
+        v_pages = n(B * nb, bs, KH, D)
+        bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+        ctx_lens = jnp.full((B,), ctx, jnp.int32)
+        return K.paged_attention, (n(B, H, D), k_pages, v_pages, bt,
+                                   ctx_lens)
     if kernel == "ssm_scan":
         B, S = shapes["batch"], shapes["seq"]
         Di, N = shapes["d_inner"], shapes["state_dim"]

@@ -157,6 +157,9 @@ def _clamp_config(kernel: str, shapes: Mapping[str, int],
         # pads ragged tails, so a plain min-clamp matches the kernel
         c["block_q"] = max(min(int(c["block_q"]), shapes["seq_q"]), 1)
         c["block_k"] = max(min(int(c["block_k"]), shapes["seq_kv"]), 1)
+    elif kernel == "paged_attention":
+        # pages pad the context tail; any size up to the context launches
+        c["block_size"] = max(min(int(c["block_size"]), shapes["ctx"]), 1)
     elif kernel == "ssm_scan":
         c["block_d"] = divisor_clamp(c["block_d"], shapes["d_inner"])
     elif kernel == "wkv6":
@@ -210,6 +213,50 @@ def _fa_census(shapes, cfg, dtype):
     hist = {k: v * cells for k, v in per_cell.items()}
     return {"flops": flops, "hbm_bytes": hbm, "op_histogram": hist,
             "mxu_shape": (bq, bk, D)}
+
+
+# ---------------------------------------------------------------------------
+# paged_attention (decode through a block table; the tunable axis is the
+# KV page size — a cache-LAYOUT parameter the paged serving engine reads
+# from the tuning cache when it sizes its block pool)
+# ---------------------------------------------------------------------------
+
+def _pa_enumerate(shapes, dtype, allow_low_precision=False):
+    return [{"block_size": bs} for bs in _blocks_upto(shapes["ctx"])]
+
+
+def _pa_vmem(shapes, cfg, dtype):
+    it = _dtype_bytes(dtype)
+    D, bs = shapes["head_dim"], cfg["block_size"]
+    ctx = shapes["ctx"]
+    kv = 2 * bs * D * it                   # one K + one V page
+    q_o = D * (4 + it)                     # q in f32 + output row
+    state = (D + 2) * 4                    # acc + (m, l), f32
+    scores = bs * 4                        # s/p transient
+    table = -(-ctx // bs) * 4              # the block-table row
+    return kv + q_o + state + scores + table
+
+
+def _pa_census(shapes, cfg, dtype):
+    """The block-size trade the cost model arbitrates: small pages read
+    fewer padded tail bytes (less fragmentation amplification) but pay
+    more per-page issue/gather overhead; large pages amortize issue cost
+    but round every context up to a coarser multiple."""
+    B, H, KH = shapes["batch"], shapes["heads"], shapes["kv_heads"]
+    D, ctx, bs = shapes["head_dim"], shapes["ctx"], cfg["block_size"]
+    it = _dtype_bytes(dtype)
+    nb = -(-ctx // bs)
+    cells = B * H
+    flops = 4.0 * B * H * ctx * D
+    # K/V reads are page-granular (the padded tail is read, not the exact
+    # ctx); q/o one row per head; one table read per page
+    hbm = 2.0 * B * KH * nb * bs * D * it + 2.0 * B * H * D * it \
+        + B * nb * 4.0
+    per_cell = {"dot": 2.0 * nb, "exponential": 2.0 * nb,
+                "maximum": 2.0 * nb, "multiply": 3.0 * nb,
+                "add": 2.0 * nb, "dynamic-slice": 2.0 * nb, "fusion": 1.0}
+    hist = {k: v * cells for k, v in per_cell.items()}
+    return {"flops": flops, "hbm_bytes": hbm, "op_histogram": hist}
 
 
 # ---------------------------------------------------------------------------
@@ -324,6 +371,16 @@ TUNABLES: Dict[str, Tunable] = {
             enumerate_fn=_fa_enumerate,
             census_fn=_fa_census,
             vmem_fn=_fa_vmem,
+        ),
+        Tunable(
+            name="paged_attention",
+            shape_keys=("batch", "heads", "kv_heads", "head_dim", "ctx"),
+            default_shapes={"batch": 8, "heads": 8, "kv_heads": 2,
+                            "head_dim": 128, "ctx": 2048},
+            default_config={"block_size": 16},
+            enumerate_fn=_pa_enumerate,
+            census_fn=_pa_census,
+            vmem_fn=_pa_vmem,
         ),
         Tunable(
             name="ssm_scan",

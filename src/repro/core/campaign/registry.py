@@ -16,6 +16,9 @@ arXiv:2208.11174) onto this backend's measurement primitives:
   * ``autotune``             - the tables applied: cost-model-guided launch
                                configs per tunable kernel (predicted best
                                vs default, optional measured refinement)
+  * ``paged_serve``          - the memory model applied to serving: slot vs
+                               paged KV cache on the same request trace
+                               (tokens/s, resident KV bytes, preemptions)
 
 Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
 dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
@@ -175,6 +178,8 @@ def run_autotune_cell(params: Dict[str, Any], quick: bool = False
         shapes = {
             "flash_attention": {"batch": 1, "seq_q": 128, "seq_kv": 128,
                                 "heads": 2, "kv_heads": 1, "head_dim": 64},
+            "paged_attention": {"batch": 2, "heads": 2, "kv_heads": 1,
+                                "head_dim": 32, "ctx": 128},
             "ssm_scan": {"batch": 1, "seq": 64, "d_inner": 256,
                          "state_dim": 8},
             "wkv6": {"batch": 1, "seq": 64, "heads": 4, "head_dim": 32},
@@ -195,6 +200,71 @@ def run_autotune_cell(params: Dict[str, Any], quick: bool = False
         if res.measured_speedup is not None:
             out["measured_speedup"] = res.measured_speedup
     return out
+
+
+def run_paged_serve_cell(params: Dict[str, Any], quick: bool = False
+                         ) -> Dict[str, Any]:
+    """Serve one deterministic mixed-length trace through BOTH engines and
+    compare: tokens/s, resident KV bytes, greedy-token equality, and the
+    paged engine's preemption/leak accounting."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS, reduced
+    from repro.models.zoo import build_model
+    from repro.serve import PagedServingEngine, ServingEngine
+
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    weights = model.init(jax.random.PRNGKey(0))
+    n_req = 6 if quick else int(params.get("n_requests", 16))
+    max_batch, max_len = 4, 64
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(1, 33))).astype(np.int32)
+               for _ in range(n_req)]
+
+    slot = ServingEngine(model, weights, max_batch=max_batch,
+                         max_len=max_len)
+    rids_s = [slot.submit(p, max_new_tokens=6) for p in prompts]
+    t0 = time.perf_counter()
+    s_stats = slot.run_until_done()
+    slot_s = time.perf_counter() - t0
+
+    bs = int(params["block_size"])
+    pool = params.get("n_blocks")
+    # default pool: ~60% of the slot-equivalent rectangle — the memory
+    # saving the paged layout exists to bank
+    n_blocks = int(pool) if pool else max(
+        -(-max_len // bs), int(0.6 * max_batch * (-(-max_len // bs))))
+    paged = PagedServingEngine(model, weights, max_batch=max_batch,
+                               max_len=max_len, block_size=bs,
+                               n_blocks=n_blocks,
+                               chunk_size=int(params.get("chunk", 16)))
+    rids_p = [paged.submit(p, max_new_tokens=6) for p in prompts]
+    t0 = time.perf_counter()
+    p_stats = paged.run_until_done(max_steps=20_000)
+    paged_s = time.perf_counter() - t0
+
+    identical = all(slot.done[a].tokens == paged.done[b].tokens
+                    for a, b in zip(rids_s, rids_p))
+    paged.allocator.check()
+    return {
+        "completed_slot": s_stats.completed,
+        "completed_paged": p_stats.completed,
+        "slot_tok_per_s": s_stats.decoded_tokens / max(slot_s, 1e-9),
+        "paged_tok_per_s": p_stats.decoded_tokens / max(paged_s, 1e-9),
+        "slot_kv_bytes": slot.kv_cache_bytes(),
+        "paged_kv_bytes": paged.kv_cache_bytes(),
+        "kv_bytes_ratio": paged.kv_cache_bytes() / slot.kv_cache_bytes(),
+        "identical_tokens": identical,
+        "preemptions": p_stats.preemptions,
+        "prefill_chunks": p_stats.prefill_chunks,
+        "peak_block_occupancy": p_stats.peak_blocks_in_use / n_blocks,
+        "blocks_leaked": n_blocks - paged.allocator.n_free,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -303,16 +373,29 @@ register(Experiment(
     description="cost-model-guided kernel autotuning: ranked launch "
                 "configs per tunable Pallas kernel (analytic; 'measured' "
                 "adds the top-K wall-time refinement stage)",
-    grid={"kernel": ("flash_attention", "ssm_scan", "wkv6", "mxu_probe"),
+    grid={"kernel": ("flash_attention", "paged_attention", "ssm_scan",
+                     "wkv6", "mxu_probe"),
           "dtype": ("bf16",),
           "mode": ("analytic", "measured")},
-    quick_grid={"kernel": ("flash_attention", "ssm_scan", "wkv6",
-                           "mxu_probe"),
+    quick_grid={"kernel": ("flash_attention", "paged_attention", "ssm_scan",
+                           "wkv6", "mxu_probe"),
                 "dtype": ("bf16",),
                 "mode": ("analytic",)},
     runner=run_autotune_cell,
     cost_per_cell_s=6.0,
     tags=("autotune", "costmodel"),
+))
+
+register(Experiment(
+    name="paged_serve",
+    description="slot vs paged KV-cache serving on one deterministic "
+                "mixed-length trace: tokens/s, resident KV bytes, greedy "
+                "equality, preemption + block-leak accounting",
+    grid={"block_size": (8, 16), "chunk": (16,)},
+    quick_grid={"block_size": (8,), "chunk": (8,)},
+    runner=run_paged_serve_cell,
+    cost_per_cell_s=30.0,
+    tags=("serve", "paging", "memory"),
 ))
 
 register(Experiment(

@@ -114,6 +114,26 @@ def autotune_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def paged_serve_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Slot-vs-paged serving comparison from a ``paged_serve`` result
+    file: throughput side by side with resident KV bytes, plus the
+    correctness/accounting columns the CI smoke step greps."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        name = f"paged_serve/bs{p['block_size']}"
+        derived = (f"slot_tok_s={m['slot_tok_per_s']:.1f};"
+                   f"paged_tok_s={m['paged_tok_per_s']:.1f};"
+                   f"slot_kv_bytes={m['slot_kv_bytes']};"
+                   f"paged_kv_bytes={m['paged_kv_bytes']};"
+                   f"kv_ratio={m['kv_bytes_ratio']:.3f};"
+                   f"identical={m['identical_tokens']};"
+                   f"completed={m['completed_paged']}/{m['completed_slot']};"
+                   f"preemptions={m['preemptions']};"
+                   f"blocks_leaked={m['blocks_leaked']}")
+        rows.append((name, 0.0, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -121,6 +141,7 @@ _TABLE_FOR = {
     "isa_mapping": isa_table,
     "roofline_calibration": roofline_table,
     "autotune": autotune_table,
+    "paged_serve": paged_serve_table,
 }
 
 

@@ -8,12 +8,14 @@ invoke tunables by name.
 """
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (KERNEL_DEFAULTS, alu_chain,  # noqa: F401
-                               flash_attention, mxu_probe, pointer_chase,
-                               resolve_kernel_config, ssm_scan, wkv6)
+                               flash_attention, mxu_probe, paged_attention,
+                               pointer_chase, resolve_kernel_config,
+                               ssm_scan, wkv6)
 
 # name -> public entry point (the autotuner's enumeration surface)
 KERNELS = {
     "flash_attention": flash_attention,
+    "paged_attention": paged_attention,
     "ssm_scan": ssm_scan,
     "wkv6": wkv6,
     "mxu_probe": mxu_probe,

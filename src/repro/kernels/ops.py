@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.core.autotune.space import TUNABLES, divisor_clamp
 from repro.kernels import (flash_attention as _fa, microbench_alu as _alu,
                            microbench_chase as _chase, mxu_probe as _mxu,
-                           ssm_scan as _ssm, wkv6 as _wkv)
+                           paged_attention as _pa, ssm_scan as _ssm,
+                           wkv6 as _wkv)
 
 # kernel name -> default launch config (the pre-autotuner hardcoded values)
 KERNEL_DEFAULTS = {name: dict(t.default_config)
@@ -76,6 +77,27 @@ def flash_attention(q, k, v, causal=True, window=None, softcap=None,
     return _fa_jit(q, k, v, causal, window, softcap, scale,
                    int(c["block_q"]), int(c["block_k"]),
                    str(c["acc_dtype"]), interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "interpret"))
+def _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale, window,
+            softcap, interpret):
+    return _pa.paged_attention(q, k_pages, v_pages, block_tables,
+                               context_lens, scale=scale, window=window,
+                               softcap=softcap, interpret=interpret)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
+                    scale=None, window=None, softcap=None, interpret=None):
+    """Paged decode attention.  Unlike the other tunables, the tunable axis
+    (``block_size``) is a CACHE-LAYOUT parameter, fixed here by
+    ``k_pages.shape[1]`` — the paged serving engine consults the tuning
+    cache (``Autotuner.config_for('paged_attention', ...)``) when it lays
+    out the block pool, not at dispatch time."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale,
+                   window, softcap, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

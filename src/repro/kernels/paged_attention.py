@@ -1,0 +1,117 @@
+"""Paged-attention decode kernel (TPU Pallas).
+
+Single-token decode attention over a paged KV cache: K/V live in a fixed
+pool of ``[n_pages, block_size]`` token pages and each sequence names its
+pages through a block table, so the kernel gathers exactly the pages a
+context occupies instead of streaming a ``max_len`` stripe per sequence —
+the block size *is* the memory-access granularity, which is what the
+paper's hierarchy tables price.
+
+Grid is ``(batch, heads)``; the GQA page panel for a query head resolves
+in the BlockSpec index_map (like ``flash_attention``), and the inner loop
+walks the sequence's valid pages with the online-softmax (m, l, acc)
+recurrence.  Page ids are data (loaded from the block-table ref), so the
+K/V loads use ``pl.ds`` dynamic slices; the loop trip count is the
+sequence's own ``ceil(ctx / block_size)``, so short contexts cost few
+iterations regardless of the table width.
+
+The pure-jnp oracle is ``repro.kernels.ref.paged_attention_ref`` (what
+CPU CI asserts against); the model-side reference path used by the paged
+serving engine lives in ``models.layers.attention`` (it also handles the
+paged *write*).
+
+VMEM caveat: the in_specs below declare the whole page pool as one block
+per grid cell — exact in interpret mode and fine for CI-sized pools, but
+a production Mosaic lowering of a large pool should keep the pages in
+HBM/ANY memory space and DMA the table-selected page per loop iteration
+instead.  The autotuner's ``space._pa_vmem`` deliberately prices that
+pipelined working set (one K page + one V page + the q/acc rows), i.e.
+the footprint the kernel is *meant* to have, not the staged pool.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e38
+
+
+def _pa_kernel(q_ref, bt_ref, ctx_ref, k_ref, v_ref, o_ref, *, scale,
+               window, softcap, block_size, n_pages):
+    q = q_ref[0].astype(jnp.float32) * scale              # [1, D]
+    D = q.shape[-1]
+    ctx = ctx_ref[0, 0]
+    n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
+
+    def body(j, carry):
+        m, l, acc = carry
+        raw = bt_ref[0, j]
+        pid = jnp.clip(raw, 0, n_pages - 1)
+        k = k_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)  # [bs, D]
+        v = v_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)
+        s = q @ k.T                                       # [1, bs]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        # in-ctx positions whose table entry is -1 (unbacked page) must
+        # mask, not attend the clipped page 0 — matches the ref oracle
+        mask = (k_pos < ctx) & (raw >= 0)                 # causal by layout
+        if window is not None:
+            mask &= (ctx - 1 - k_pos) < window
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, D), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_valid, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
+                    scale=None, window=None, softcap=None, interpret=False):
+    """q [B,H,D]; k/v_pages [P,bs,KH,D]; block_tables [B,NB] int32 (-1 =
+    unbacked); context_lens [B] int32 -> [B,H,D].
+
+    Attention of one new token per sequence over its paged context: the
+    query position is ``context_lens - 1`` (causality holds by
+    construction — only written positions are < ctx), with optional
+    sliding ``window`` and logit ``softcap`` matching the flash kernel.
+    Rows with ``context_lens == 0`` produce zeros (masked everywhere).
+    """
+    B, H, D = q.shape
+    P, bs, KH, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    group = H // KH
+
+    grid = (B, H)
+    out = pl.pallas_call(
+        functools.partial(_pa_kernel, scale=scale, window=window,
+                          softcap=softcap, block_size=bs, n_pages=P),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, NB), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+            pl.BlockSpec((P, bs, 1, D),
+                         lambda b, h, g=group: (0, 0, h // g, 0)),
+            pl.BlockSpec((P, bs, 1, D),
+                         lambda b, h, g=group: (0, 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(q,
+      jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
+      k_pages, v_pages)
+    return out

@@ -94,3 +94,47 @@ def mxu_probe_ref(a, b, *, chain=1):
         c = (jnp.dot(a.astype(jnp.float32), c.astype(jnp.float32))
              * 0.001).astype(b.dtype)
     return c
+
+
+def gather_pages(pages, block_tables):
+    """Paged KV -> logical view.  pages [P,bs,KH,D]; block_tables [B,NB]
+    (-1 = unbacked, gathered as page 0 and masked by the caller) ->
+    [B, NB*bs, KH, D]."""
+    P, bs = pages.shape[0], pages.shape[1]
+    NB = block_tables.shape[1]
+    lslot = jnp.arange(NB * bs, dtype=jnp.int32)
+    page = block_tables[:, lslot // bs]                    # [B, NB*bs]
+    idx = jnp.where(page >= 0, page * bs + (lslot % bs)[None], 0)
+    return pages.reshape((P * bs,) + pages.shape[2:])[idx]
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens, *,
+                        scale=None, window=None, softcap=None):
+    """Single-token decode attention through a block table (the oracle for
+    kernels.paged_attention).  q [B,H,D]; k/v_pages [P,bs,KH,D];
+    block_tables [B,NB]; context_lens [B] -> [B,H,D] (f32 accumulation)."""
+    B, H, D = q.shape
+    bs, KH = k_pages.shape[1], k_pages.shape[2]
+    NB = block_tables.shape[1]
+    k = gather_pages(k_pages, block_tables)                # [B, L, KH, D]
+    v = gather_pages(v_pages, block_tables)
+    if KH != H:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    lslot = jnp.arange(NB * bs, dtype=jnp.int32)[None]     # [1, L]
+    ctx = context_lens[:, None]
+    valid = (lslot < ctx) & (block_tables[:, lslot[0] // bs] >= 0)
+    if window is not None:
+        valid &= (ctx - 1 - lslot) < window
+    s = jnp.where(valid[:, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (ctx == 0): uniform p, zeroed out explicitly
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    out = jnp.where((context_lens > 0)[:, None, None], out, 0.0)
+    return out.astype(q.dtype)

@@ -15,6 +15,10 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--host", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV engine "
+                         "(block-pool cache + chunked prefill)")
+    ap.add_argument("--block-size", type=int, default=8)
     args = ap.parse_args()
 
     if args.dry_run:
@@ -30,18 +34,25 @@ def main():
     import numpy as np
     from repro.configs import get_config, reduced
     from repro.models.zoo import build_model
-    from repro.serve.engine import ServingEngine
+    from repro.serve.engine import PagedServingEngine, ServingEngine
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, max_batch=4, max_len=64)
+    if args.paged:
+        eng = PagedServingEngine(model, params, max_batch=4, max_len=64,
+                                 block_size=args.block_size, chunk_size=8)
+    else:
+        eng = ServingEngine(model, params, max_batch=4, max_len=64)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         eng.submit(rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
                    max_new_tokens=8)
     stats = eng.run_until_done()
-    print(f"served {stats.completed} requests, {stats.decoded_tokens} tokens")
+    extra = (f", {stats.prefill_chunks} chunks, "
+             f"{stats.preemptions} preemptions" if args.paged else "")
+    print(f"served {stats.completed} requests, "
+          f"{stats.decoded_tokens} tokens{extra}")
 
 
 if __name__ == "__main__":

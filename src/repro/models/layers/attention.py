@@ -171,10 +171,55 @@ def _project_kv(p, xk, cfg):
     return k, v
 
 
+def _paged_update_gather(cache, k_new, v_new, block_tables, write_pos):
+    """Write ``Sq`` new tokens per row into the paged KV pool through the
+    block table, then gather the logical per-row K/V view for attention.
+
+    cache         {'k','v': [n_blocks, bs, KH, hd]} the physical pool
+    k_new, v_new  [B, Sq, KH, hd] projections for this call's tokens
+    block_tables  [B, NB] int32 physical block per logical block (-1 =
+                  unbacked; positions there are masked)
+    write_pos     [B] first write position; may be NEGATIVE (left-padded
+                  chunked-prefill calls, or inactive rows at -1) — those
+                  token writes scatter out-of-bounds and are dropped
+
+    Returns (new_cache, k [B,L,KH,hd], v, kpos [B,L]) with L = NB*bs; the
+    gathered view is the pure-jnp CPU reference of the paged decode (the
+    Pallas ``kernels.paged_attention`` gathers page-by-page on TPU).
+    """
+    ck, cv = cache["k"], cache["v"]
+    nb, bs = ck.shape[0], ck.shape[1]
+    B, Sq, KH, hd = k_new.shape
+    NB = block_tables.shape[1]
+    pos = write_pos[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.clip(pos // bs, 0, NB - 1), axis=1)
+    # flat physical slot per new token; invalid -> nb*bs, dropped by the
+    # out-of-bounds scatter mode
+    phys = jnp.where((pos >= 0) & (blk >= 0), blk * bs + pos % bs, nb * bs)
+
+    def write(c, n):
+        flat = c.reshape(nb * bs, KH, hd)
+        flat = flat.at[phys.reshape(-1)].set(
+            n.reshape(B * Sq, KH, hd).astype(c.dtype), mode="drop")
+        return flat.reshape(c.shape)
+
+    k_cache, v_cache = write(ck, k_new), write(cv, v_new)
+
+    lslot = jnp.arange(NB * bs, dtype=jnp.int32)
+    page = block_tables[:, lslot // bs]                     # [B, L]
+    idx = jnp.where(page >= 0, page * bs + (lslot % bs)[None], 0)
+    written = (page >= 0) & (lslot[None] <= write_pos[:, None] + Sq - 1)
+    k = k_cache.reshape(nb * bs, KH, hd)[idx]
+    v = v_cache.reshape(nb * bs, KH, hd)[idx]
+    kpos = jnp.where(written, lslot[None], -1)
+    return {"k": k_cache, "v": v_cache}, k, v, kpos
+
+
 def attention(p, x, *, cfg, positions, is_global, theta=None,
               memory=None, mem_positions=None,
               cache: Optional[dict] = None, write_pos=None,
-              pre_output=False, causal=True):
+              block_tables=None, pre_output=False, causal=True):
     """Unified attention layer.
 
     x          [B,Sq,D]   layer input (post-norm)
@@ -182,7 +227,12 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
     is_global  bool/array scalar flag; local layers use cfg.window
     memory     [B,Sm,D]   if set: cross-attention onto encoder memory
     cache      {'k','v' : [B,Smax,KH,hd]} decode/prefill KV cache (self-attn)
+               — or the paged pool [n_blocks,bs,KH,hd] with block_tables
     write_pos  [B]        decode: slot to write the new token's K/V
+    block_tables [B,NB]   paged decode: per-row physical block ids; the
+               cache is then the shared block pool and K/V are gathered
+               through the table (``models`` CPU reference of the paged
+               path; ``kernels.paged_attention`` is the TPU kernel)
     pre_output if True return pre-wo head outputs [B,Sq,H*hd] (hymba fusion)
 
     Returns (out, new_cache).
@@ -214,6 +264,16 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
         v = v_new
         kpos = positions
         new_cache = {"k": k, "v": v}   # prefill: rope'd K, raw V
+    elif block_tables is not None:
+        # paged decode: scatter the new K/V through the block table into
+        # the shared pool, gather the logical context view back, and
+        # attend with unwritten/unbacked slots masked (kpos = -1)
+        k_new, v_new = _project_kv(p, x, cfg)
+        k_new = apply_rope(k_new, sin_q, cos_q)
+        new_cache, k, v, kpos = _paged_update_gather(
+            cache, k_new, v_new, block_tables, write_pos)
+        k, v = k.astype(cdt), v.astype(cdt)
+        causal = True
     else:
         # write new K/V into the cache at write_pos (per-row), then attend.
         k_new, v_new = _project_kv(p, x, cfg)
@@ -251,12 +311,29 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
     # the pallas path applies when the window question is static: either
     # is_global is a python bool, or the config has no window at all.
     static_global = isinstance(is_global, bool)
+    use_paged_kernel = (
+        block_tables is not None and cfg.use_pallas and Sq == 1
+        and not cross and Hp == cfg.n_heads
+        and cfg.n_heads % max(cfg.n_kv_heads, 1) == 0
+        and cfg.meta_tokens == 0
+        and (static_global or cfg.window is None)
+        and jax.default_backend() == "tpu")
     use_pallas = (
         cfg.use_pallas and cache is None and not cross
         and Hp == cfg.n_heads and cfg.n_heads % max(cfg.n_kv_heads, 1) == 0
         and cfg.meta_tokens == 0
         and (static_global or cfg.window is None))
-    if use_pallas:
+    if use_paged_kernel:
+        # TPU hot path for paged decode: gather K/V page-by-page through
+        # the block table inside the kernel (the jnp gather above is dead
+        # code XLA eliminates).  Context length = write position + 1.
+        from repro.kernels import ops as kops
+        window = cfg.window if static_global and not is_global else None
+        out_h = kops.paged_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], block_tables,
+            write_pos + 1, scale=scale, window=window,
+            softcap=cfg.attn_softcap)[:, None]
+    elif use_pallas:
         # TPU hot path: the blocked flash kernel (kernels/flash_attention);
         # ragged sequence tails are padded+masked inside the kernel.
         # tuned=True resolves block_q/block_k/acc_dtype from the installed
@@ -289,6 +366,16 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
 def init_kv_cache(cfg, batch, max_len, n_layers, dtype=jnp.bfloat16):
     kh, hd = cfg.n_kv_heads, cfg.head_dim
     shape = (n_layers, batch, max_len, kh, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv_cache(cfg, n_blocks, block_size, n_layers,
+                        dtype=jnp.bfloat16):
+    """The paged pool: ``n_blocks`` shared blocks of ``block_size`` token
+    slots per layer — resident KV bytes scale with the pool, not with
+    ``max_batch x max_len``."""
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, n_blocks, block_size, kh, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

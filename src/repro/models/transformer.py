@@ -162,6 +162,23 @@ def init_decode_cache(cfg, batch, max_len):
     return c
 
 
+def init_paged_decode_cache(cfg, n_blocks, block_size):
+    """The paged decode cache: one shared pool of KV blocks per layer.
+
+    Only plain GQA-attention stacks page cleanly — recurrent families
+    (ssm/rwkv/hybrid) carry per-slot state that is not positional, and
+    meta tokens / modality prefixes are prepended by prefill-mode calls
+    the chunked path never makes — so everything else raises loudly."""
+    if (cfg.attn_impl != "gqa" or cfg.family in ("ssm", "hybrid")
+            or cfg.ssm is not None or cfg.rwkv is not None
+            or cfg.meta_tokens or cfg.frontend is not None):
+        raise NotImplementedError(
+            f"{cfg.name}: paged KV cache needs a plain GQA attention "
+            "stack (no recurrent state, meta tokens, or prefix embeds)")
+    return attn_mod.init_paged_kv_cache(cfg, n_blocks, block_size,
+                                        cfg.n_layers)
+
+
 def decode_cache_specs(cfg, batch_axes=("data",), seq_axis="model"):
     s = {}
     if cfg.attn_impl == "mla":
@@ -187,7 +204,8 @@ def _split_cache(cache, kind):
 # one decoder layer
 
 
-def _layer(x, lp, *, cfg, positions, is_global, cache_layer, write_pos, mode):
+def _layer(x, lp, *, cfg, positions, is_global, cache_layer, write_pos, mode,
+           block_tables=None):
     """Returns (x, new_cache_layer, aux)."""
     cdt = x.dtype
     x = ctx.constrain(x, "batch", None, None)
@@ -224,6 +242,7 @@ def _layer(x, lp, *, cfg, positions, is_global, cache_layer, write_pos, mode):
         a_out, a_cache = attn_mod.attention(
             lp["attn"], h_in, cfg=cfg, positions=positions,
             is_global=is_global, cache=use_cache, write_pos=write_pos,
+            block_tables=block_tables,
             pre_output=(cfg.family == "hybrid"))
 
     new_cache = {}
@@ -290,15 +309,22 @@ def _prefill_pad_cache(cache_layer, max_len):
 
 
 def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
-             write_pos=None, max_len=None, remat=True):
+             write_pos=None, block_tables=None, max_len=None, remat=True):
     """Run the LM trunk.
 
-    tokens        [B,S] int32 (decode: S==1)
+    tokens        [B,S] int32 (decode: S==1, or a chunked-prefill chunk)
     prefix_embeds [B,P,D] stub modality embeddings (vlm), prepended
-    cache         stacked decode cache (mode == 'decode')
-    write_pos     [B] cache slot for the new token (decode)
+    cache         stacked decode cache (mode == 'decode'); with
+                  block_tables, the stacked PAGED pool [L,n_blocks,bs,...]
+    write_pos     [B] cache slot for the new tokens (decode); may be
+                  negative for left-padded chunked-prefill rows (those
+                  writes are dropped by the paged scatter)
+    block_tables  [B,NB] paged decode: per-row physical block ids
     Returns (logits, aux, new_cache).
     """
+    if block_tables is not None and cfg.attn_impl != "gqa":
+        raise NotImplementedError(
+            f"paged decode needs a GQA KV cache, not {cfg.attn_impl}")
     cdt = jnp.dtype(cfg.compute_dtype)
     B, S = tokens.shape
     x = basic.embed_tokens(params["embed"], tokens, cdt,
@@ -321,7 +347,10 @@ def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
 
     St = x.shape[1]
     if mode == "decode":
-        positions = write_pos[:, None]
+        # decode calls may carry St > 1 tokens (chunked prefill through
+        # the decode path); token t sits at absolute position
+        # write_pos + t.  For St == 1 this is the old write_pos[:, None].
+        positions = write_pos[:, None] + jnp.arange(St, dtype=jnp.int32)[None]
     else:
         positions = jnp.broadcast_to(jnp.arange(St, dtype=jnp.int32)[None], (B, St))
 
@@ -337,7 +366,8 @@ def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
         cl = (jax.tree.map(lambda c: c[i], cache) if cache is not None else None)
         x, ncl, aux = _layer(x, lp, cfg=cfg, positions=positions,
                              is_global=glob[i], cache_layer=cl,
-                             write_pos=write_pos, mode=mode)
+                             write_pos=write_pos, mode=mode,
+                             block_tables=block_tables)
         aux_tot = jax.tree.map(jnp.add, aux_tot, aux)
         if mode != "train":
             pre_caches.append(_prefill_pad_cache(ncl, max_len)
@@ -358,7 +388,8 @@ def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
             cl = None
         x, ncl, aux = _layer(x, lp, cfg=cfg, positions=positions,
                              is_global=g, cache_layer=cl,
-                             write_pos=write_pos, mode=mode)
+                             write_pos=write_pos, mode=mode,
+                             block_tables=block_tables)
         aux_acc = jax.tree.map(jnp.add, aux_acc, aux)
         if mode == "train":
             ys = 0.0
@@ -382,9 +413,10 @@ def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
         params["ln_f"], x, cfg.norm_eps)
     if n_prefix and mode != "decode":
         x = x[:, n_prefix:, :]
-    if mode == "prefill":
-        # only the last position's logits are ever used after a prefill;
-        # unembedding the whole prompt would materialize [B,S,V] for nothing
+    if mode != "train" and x.shape[1] > 1:
+        # only the last position's logits are ever used after a prefill or
+        # a chunked-prefill decode call; unembedding the whole chunk would
+        # materialize [B,S,V] for nothing
         x = x[:, -1:, :]
     logits = basic.unembed(params["embed"], x, cdt, cfg.logit_softcap,
                            vocab=cfg.vocab_size)

@@ -16,7 +16,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,10 @@ class Model:
     cache_specs: Callable
     input_specs: Callable
     input_shardings: Callable
+    # paged serving (None where the family has no paged KV cache):
+    # init_paged_cache(n_blocks, block_size) -> pool; decode then takes
+    # an optional block_tables=[B,NB] arg routing K/V through the pool
+    init_paged_cache: Optional[Callable] = None
 
 
 def _frontend_width(cfg: ModelCfg, cell: ShapeCell) -> int:
@@ -97,14 +101,17 @@ def _build_lm(cfg: ModelCfg) -> Model:
             prefix_embeds=batch.get("prefix_embeds"), max_len=max_len)
         return logits[:, -1, :], cache
 
-    def decode(params, cache, tokens, pos):
+    def decode(params, cache, tokens, pos, block_tables=None):
         logits, _, cache = lm_mod.lm_apply(
             params, cfg, tokens=tokens, mode="decode", cache=cache,
-            write_pos=pos)
+            write_pos=pos, block_tables=block_tables)
         return logits[:, -1, :], cache
 
     def init_cache(batch, max_len):
         return lm_mod.init_decode_cache(cfg, batch, max_len)
+
+    def init_paged_cache(n_blocks, block_size):
+        return lm_mod.init_paged_decode_cache(cfg, n_blocks, block_size)
 
     def cache_specs(batch_axes=("data",), seq_axis="model"):
         return lm_mod.decode_cache_specs(cfg, batch_axes, seq_axis)
@@ -147,7 +154,8 @@ def _build_lm(cfg: ModelCfg) -> Model:
                 "cache": cache_specs(batch_axes, seq_axis)}
 
     return Model(cfg, init, param_specs, loss, prefill, decode, init_cache,
-                 cache_specs, input_specs, input_shardings)
+                 cache_specs, input_specs, input_shardings,
+                 init_paged_cache=init_paged_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -174,7 +182,9 @@ def _build_encdec(cfg: ModelCfg) -> Model:
             mode="prefill", max_len=max_len)
         return logits[:, -1, :], cache
 
-    def decode(params, cache, tokens, pos):
+    def decode(params, cache, tokens, pos, block_tables=None):
+        if block_tables is not None:
+            raise NotImplementedError("no paged decode for encoder-decoder")
         logits, _, cache = encdec_mod.encdec_apply(
             params, cfg, tokens=tokens, mode="decode", cache=cache,
             write_pos=pos)

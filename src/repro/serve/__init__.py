@@ -1,1 +1,4 @@
-from repro.serve.engine import Request, ServingEngine  # noqa
+from repro.serve.engine import (EngineStats, PagedServingEngine,  # noqa
+                                Request, ServingEngine)
+from repro.serve.paging import BlockAllocator, blocks_for_tokens  # noqa
+from repro.serve.scheduler import ChunkedPrefillScheduler  # noqa

@@ -1,34 +1,41 @@
-"""Batched serving engine: continuous batching over a fixed decode batch.
+"""Batched serving engines: slot-granular continuous batching, and the
+paged engine that replaces per-slot ``max_len`` KV stripes with a shared
+block pool.
 
-Requests queue in; the engine packs up to `max_batch` concurrent sequences
-into one KV cache, prefills new arrivals into free slots (per-slot write
-positions — the model's decode path already takes per-row `pos`), decodes
-one token per step for every active slot, and retires sequences on EOS or
-length budget.  This is the vLLM-style loop reduced to its scheduling core,
-with slot-granular (not paged) KV memory.
+``ServingEngine`` is the vLLM-style loop reduced to its scheduling core
+with slot-granular KV memory: every admitted sequence reserves a full
+``max_len`` stripe of the batch cache, so KV bytes resident are always
+``max_batch x max_len`` regardless of actual context lengths.
 
-Admission control is cost-model-driven when a ``repro.core.costmodel.
-CostModel`` is supplied: the engine prices the decode step and each pending
-prefill from their compiled modules' instruction censuses, and packs
-prefills into an engine iteration only while the predicted iteration time
-(decode + admitted prefills) stays under ``step_budget_s`` — the predicted
-decode-step latency gates how many prefills ride along, instead of greedily
-stuffing every free slot and stalling in-flight decodes behind a wall of
-prefill compute.
+``PagedServingEngine`` replaces that with a paged subsystem:
 
-Kernel dispatch is autotuner-aware: pass an ``repro.core.autotune.
-Autotuner`` (with its persistent tuning cache) and the engine installs it
-as the dispatch handle for the duration of each ``step()``, so every
-``tuned=True`` Pallas kernel call inside the model (flash attention in
-prefill, the recurrent scans) resolves its launch config from the tuned
-cache instead of the hardcoded defaults — and two engines with different
-tuners (or none) never leak configs into each other.
+* the KV store is a fixed pool of blocks (``serve.paging``) gathered
+  through per-request block tables — resident KV bytes are
+  ``n_blocks x block_size``, sized to the *traffic*, not to the
+  worst-case ``max_batch x max_len`` rectangle;
+* admission is a policy object (``serve.scheduler``): prompts prefill in
+  fixed-size chunks interleaved with decode steps, each chunk priced via
+  the cost model so the iteration respects ``step_budget_s``;
+* when the pool runs out, the youngest placed request is preempted —
+  its blocks freed, the request re-enqueued at the queue front — and
+  replayed later (greedy decode is deterministic, so eviction never
+  changes tokens); the oldest placed request is never evicted, which
+  guarantees forward progress;
+* on retire, freed blocks may leave gaps; copy-on-retire compaction
+  moves the allocated blocks down to the lowest ids (one gather-then-
+  scatter copy) so the touched span of the pool stays dense.
+
+Both engines price admission with a ``repro.core.costmodel.CostModel``
+when one is supplied, install an ``repro.core.autotune.Autotuner`` handle
+for the duration of each step, and accept an injectable ``clock`` (any
+object with ``time()``/``perf_counter()``) so the simulation test harness
+can drive them on a deterministic fake clock.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
+import time as _time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -38,6 +45,9 @@ import numpy as np
 
 from repro.core.costmodel.model import CostModel, Prediction
 from repro.models.zoo import Model
+from repro.serve.paging import (BlockAllocator, blocks_for_tokens,
+                                remap_table)
+from repro.serve.scheduler import ChunkedPrefillScheduler
 
 
 @dataclasses.dataclass
@@ -55,20 +65,60 @@ class Request:
 @dataclasses.dataclass
 class EngineStats:
     steps: int = 0
-    prefills: int = 0
-    decoded_tokens: int = 0
+    prefills: int = 0               # completed prefills (net of evictions)
+    decoded_tokens: int = 0         # DELIVERED tokens (eviction replays
+    #                                 are rolled back, not double-counted)
     completed: int = 0
     deferred_prefills: int = 0      # admissions pushed to a later step
     predicted_step_s: List[float] = dataclasses.field(default_factory=list)
     measured_step_s: List[float] = dataclasses.field(default_factory=list)
+    # paged-engine extensions (stay 0/empty on the slot engine)
+    prefill_chunks: int = 0         # chunked-prefill calls run
+    preemptions: int = 0            # evictions (blocks reclaimed, re-enqueued)
+    compactions: int = 0            # copy-on-retire block compactions
+    peak_blocks_in_use: int = 0
+    block_occupancy: List[float] = dataclasses.field(default_factory=list)
+    admission_order: List[int] = dataclasses.field(default_factory=list)
 
 
-class ServingEngine:
+def _analytic_prefill_prediction(cost_model: CostModel, cfg,
+                                 n_tokens: int) -> Prediction:
+    """Price a prefill of ``n_tokens`` ANALYTICALLY (``costmodel.
+    analytic``), not by compiling it — admission runs per engine step and
+    a per-length XLA compile there would stall serving for pure
+    bookkeeping.  THE one implementation both engines' cached
+    ``_predict_*`` methods wrap, so slot and paged admission can never
+    silently price the same prompt differently."""
+    from repro.configs.base import ShapeCell
+    from repro.core.costmodel.analytic import analytic_census
+    cell = ShapeCell("admission", "prefill", n_tokens, 1)
+    return cost_model.predict(analytic_census(cfg, cell, n_devices=1,
+                                              n_model=1))
+
+
+class _TunedDispatch:
+    """Shared ``step()`` shell: install the engine's autotuner handle for
+    the duration of one ``_step()`` so tuned=True kernel lookups hit this
+    engine's cache without leaking a process-global handle."""
+
+    autotuner = None
+
+    def step(self) -> int:
+        if self.autotuner is not None:
+            from repro.core import autotune as autotune_mod
+            with autotune_mod.using(self.autotuner):
+                return self._step()
+        return self._step()
+
+
+class ServingEngine(_TunedDispatch):
+    """Slot-granular continuous batching (see module docstring)."""
+
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512,
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
-                 autotuner=None):
+                 autotuner=None, clock=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -80,6 +130,7 @@ class ServingEngine:
         # lookups) hit this engine's cache without leaking a process-global
         # handle past the engine's own iterations
         self.autotuner = autotuner
+        self._clock = clock if clock is not None else _time
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.stats = EngineStats()
@@ -94,11 +145,20 @@ class ServingEngine:
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens cannot fit "
+                             f"max_len={self.max_len} (needs >= 1 decode "
+                             "slot)")
         rid = next(self._rid)
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens, eos_id,
-                                  submitted_s=time.time()))
+        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id,
+                                  submitted_s=self._clock.time()))
         return rid
+
+    def kv_cache_bytes(self) -> int:
+        """Resident bytes of the decode cache (the full preallocated
+        ``max_batch x max_len`` stripe set, by construction)."""
+        return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
 
     # -- cost-model pricing ---------------------------------------------------
     def _predict_decode(self) -> Prediction:
@@ -118,21 +178,13 @@ class ServingEngine:
         return self._pred_cache[key]
 
     def _predict_prefill(self, prompt_len: int) -> Prediction:
-        """Price one prefill at this prompt length (cached per length).
-
-        Priced ANALYTICALLY (``costmodel.analytic``), not by compiling the
-        prefill — the admission loop runs per engine step and a per-length
-        XLA compile there would stall serving for pure bookkeeping (the
-        execution path calls ``model.prefill`` eagerly and never reuses
-        such a compile)."""
+        """Price one prefill at this prompt length (cached per length);
+        see ``_analytic_prefill_prediction`` for why this never
+        compiles."""
         key = ("prefill", prompt_len)
         if key not in self._pred_cache:
-            from repro.configs.base import ShapeCell
-            from repro.core.costmodel.analytic import analytic_census
-            cell = ShapeCell("admission", "prefill", prompt_len, 1)
-            census = analytic_census(self.model.cfg, cell, n_devices=1,
-                                     n_model=1)
-            self._pred_cache[key] = self.cost_model.predict(census)
+            self._pred_cache[key] = _analytic_prefill_prediction(
+                self.cost_model, self.model.cfg, prompt_len)
         return self._pred_cache[key]
 
     # -- internals ------------------------------------------------------------
@@ -161,10 +213,17 @@ class ServingEngine:
                     len(self.queue[0].prompt)).step_s
                 if gated and admitted > 0 \
                         and planned + pre_s > self.step_budget_s:
-                    # count only requests a free slot could have taken
-                    # this step; they retry next step
-                    self.stats.deferred_prefills += min(
-                        len(self.queue), len(free) - idx)
+                    # deferral accounting: walk the queued requests a free
+                    # slot could still have taken this step and count ONLY
+                    # those whose own predicted prefill would not have fit
+                    # in the remaining budget.  Requests blocked purely by
+                    # FIFO order behind an over-budget head (they would
+                    # have fit) are waiting on ordering, not on the
+                    # budget, and are not counted.
+                    for q in itertools.islice(self.queue, len(free) - idx):
+                        q_s = self._predict_prefill(len(q.prompt)).step_s
+                        if planned + q_s > self.step_budget_s:
+                            self.stats.deferred_prefills += 1
                     break
                 planned += pre_s
             self._prefill_into_slot(slot, self.queue.popleft())
@@ -185,24 +244,20 @@ class ServingEngine:
         self.slot_tok[slot] = int(jnp.argmax(logits[0]))
         req.tokens.append(int(self.slot_tok[slot]))
         self.stats.prefills += 1
+        self.stats.admission_order.append(req.rid)
 
     def _retire(self, slot: int):
         req = self.slot_req[slot]
-        req.finished_s = time.time()
+        req.finished_s = self._clock.time()
         self.done[req.rid] = req
         self.slot_req[slot] = None
         self.stats.completed += 1
 
-    def step(self) -> int:
-        """One engine iteration: admit, decode, retire.  Returns #active."""
-        if self.autotuner is not None:
-            from repro.core import autotune as autotune_mod
-            with autotune_mod.using(self.autotuner):
-                return self._step()
-        return self._step()
-
     def _step(self) -> int:
-        t0 = time.perf_counter()
+        """One engine iteration: admit, decode, retire.  Returns #active.
+        (``step()`` — the public entry — is the autotuner-installing shell
+        inherited from ``_TunedDispatch``.)"""
+        t0 = self._clock.perf_counter()
         planned = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -214,7 +269,8 @@ class ServingEngine:
         self.stats.steps += 1
         if self.cost_model is not None:
             self.stats.predicted_step_s.append(planned)
-            self.stats.measured_step_s.append(time.perf_counter() - t0)
+            self.stats.measured_step_s.append(
+                self._clock.perf_counter() - t0)
         for i in active:
             req = self.slot_req[i]
             req.tokens.append(int(nxt[i]))
@@ -233,4 +289,384 @@ class ServingEngine:
             active = self.step()
             if active == 0 and not self.queue:
                 break
+        return self.stats
+
+
+# ---------------------------------------------------------------------------
+# the paged engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Row:
+    """One decode row of the paged batch: the request it serves plus its
+    prefill progress.  The row's block table lives in the engine's
+    ``block_tables`` array (row-indexed), not here."""
+    req: Request
+    filled: int = 0                 # prompt tokens whose K/V are written
+    ready: bool = False             # prefill complete; decodes each step
+    pos: int = 0                    # context length == next write position
+    last_tok: int = 0
+
+
+class PagedServingEngine(_TunedDispatch):
+    """Continuous batching over a paged KV cache with chunked prefill.
+
+    ``block_size`` defaults to the autotuner's cached ``paged_attention``
+    pick when a tuner is attached (the tunable block-size axis), else 16.
+    ``n_blocks`` defaults to the slot-equivalent pool
+    (``max_batch x ceil(max_len/block_size)``); size it smaller to serve
+    the same traffic in strictly less KV memory — preemption-by-eviction
+    keeps the engine correct when the pool runs dry.
+    """
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_len: int = 512, block_size: Optional[int] = None,
+                 n_blocks: Optional[int] = None, chunk_size: int = 32,
+                 cost_model: Optional[CostModel] = None,
+                 step_budget_s: Optional[float] = None,
+                 autotuner=None, clock=None, compact_on_retire: bool = True):
+        if model.init_paged_cache is None:
+            raise NotImplementedError(
+                f"{model.cfg.name}: no paged KV cache for this architecture")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cost_model = cost_model
+        self.step_budget_s = step_budget_s
+        self.autotuner = autotuner
+        self._clock = clock if clock is not None else _time
+        self.compact_on_retire = compact_on_retire
+
+        if block_size is None:
+            block_size = 16
+            if autotuner is not None:
+                cfg = model.cfg
+                shapes = {"batch": max_batch, "heads": cfg.n_heads,
+                          "kv_heads": cfg.n_kv_heads,
+                          "head_dim": cfg.head_dim, "ctx": max_len}
+                block_size = int(autotuner.config_for(
+                    "paged_attention", shapes)["block_size"])
+        self.block_size = block_size
+        self.max_blocks_per_seq = blocks_for_tokens(max_len, block_size)
+        if n_blocks is None:
+            n_blocks = max_batch * self.max_blocks_per_seq
+        if n_blocks < self.max_blocks_per_seq:
+            # one sequence must always be able to reach max_len, or the
+            # oldest-request progress guarantee (and so termination) breaks
+            raise ValueError(
+                f"n_blocks={n_blocks} < blocks for one max_len sequence "
+                f"({self.max_blocks_per_seq})")
+        self.n_blocks = n_blocks
+
+        self.allocator = BlockAllocator(n_blocks, block_size)
+        self.scheduler = ChunkedPrefillScheduler(
+            chunk_size, step_budget_s=step_budget_s)
+        self.chunk_size = chunk_size
+        self.cache = model.init_paged_cache(n_blocks, block_size)
+        self.block_tables = np.full(
+            (max_batch, self.max_blocks_per_seq), -1, np.int32)
+        self.rows: List[Optional[_Row]] = [None] * max_batch
+        self.done: Dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._rid = itertools.count()
+        self._decode = jax.jit(model.decode)     # batch decode [B, 1]
+        self._chunk = jax.jit(model.decode)      # chunk prefill [1, C]
+        self._pred_cache: Dict = {}
+
+    # -- public ---------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) >= self.max_len:
+            # over-long prompts must be rejected HERE: mid-trace they
+            # would grow past the fixed-width block table and strand a
+            # freshly-allocated block outside any table (a pool leak)
+            raise ValueError(f"prompt of {len(prompt)} tokens cannot fit "
+                             f"max_len={self.max_len} (needs >= 1 decode "
+                             "slot)")
+        rid = next(self._rid)
+        self.scheduler.submit(Request(rid, prompt, max_new_tokens, eos_id,
+                                      submitted_s=self._clock.time()))
+        return rid
+
+    @property
+    def queue(self):
+        return self.scheduler.queue
+
+    def kv_cache_bytes(self) -> int:
+        """Resident bytes of the paged KV store: ``n_blocks x block_size``
+        token slots regardless of ``max_batch x max_len``."""
+        return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
+
+    # -- cost-model pricing ---------------------------------------------------
+    def _predict_decode(self) -> Prediction:
+        """Price the paged decode step; like the slot engine, the AOT
+        executable replaces the jitted decode (shapes never change)."""
+        key = ("decode", self.max_batch)
+        if key not in self._pred_cache:
+            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+            pos = jnp.zeros((self.max_batch,), jnp.int32)
+            bt = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
+                          jnp.int32)
+            compiled = self._decode.lower(self.params, self.cache, toks,
+                                          pos, bt).compile()
+            self._pred_cache[key] = self.cost_model.predict_compiled(
+                compiled.as_text())
+            self._decode = compiled
+        return self._pred_cache[key]
+
+    def _predict_chunk(self) -> Prediction:
+        """Price one prefill chunk as a chunk_size-token prefill (chunks
+        never shrink: final partial chunks overlap).
+
+        APPROXIMATION: the analytic census is parameter-streaming
+        dominated and linear in tokens — it does not model attention over
+        the row's already-filled context, for chunks here exactly as for
+        whole prompts in the slot engine's ``_predict_prefill``.  Late
+        chunks of a long prompt therefore cost somewhat more than this
+        gate charges them; the budget bounds chunk COUNT per step
+        faithfully, not long-context attention."""
+        key = ("chunk", self.chunk_size)
+        if key not in self._pred_cache:
+            self._pred_cache[key] = _analytic_prefill_prediction(
+                self.cost_model, self.model.cfg, self.chunk_size)
+        return self._pred_cache[key]
+
+    # -- block management -----------------------------------------------------
+    def _row_blocks(self, idx: int) -> List[int]:
+        return [int(b) for b in self.block_tables[idx] if b >= 0]
+
+    def _free_row(self, idx: int) -> None:
+        self.allocator.free(self._row_blocks(idx))
+        self.block_tables[idx] = -1
+        self.rows[idx] = None
+
+    def _placed(self) -> List[int]:
+        return [i for i, r in enumerate(self.rows) if r is not None]
+
+    def _evict_for(self, needy: int) -> bool:
+        """Free blocks by evicting a victim row.  Victim: the YOUNGEST
+        placed request, excluding the needy row itself and the OLDEST
+        placed request (never evicted — that guarantee makes the engine
+        terminate: the oldest always keeps its blocks, completes, and
+        frees them).  Returns False when no eligible victim exists."""
+        placed = self._placed()
+        oldest = min(placed, key=lambda i: self.rows[i].req.rid)
+        cands = [i for i in placed if i != needy and i != oldest]
+        if not cands:
+            return False
+        victim = max(cands, key=lambda i: self.rows[i].req.rid)
+        req = self.rows[victim].req
+        self._free_row(victim)
+        # the victim replays from scratch: roll back its DELIVERED-token
+        # accounting so replayed tokens are not double-counted (the
+        # paged_serve throughput comparison reads decoded_tokens).
+        # prefill_chunks/preemptions stay — they record work actually done.
+        if req.tokens:
+            self.stats.decoded_tokens -= len(req.tokens) - 1
+            self.stats.prefills -= 1
+        req.tokens.clear()           # replayed from scratch on re-admission
+        self.scheduler.requeue(req)
+        self.stats.preemptions += 1
+        return True
+
+    def _ensure_blocks(self, idx: int, n_needed: int) -> bool:
+        """Grow row ``idx``'s block table to ``n_needed`` blocks, evicting
+        if the pool is dry.  Returns False when the row must wait."""
+        if n_needed > self.max_blocks_per_seq:
+            # unreachable given the submit() length check + the
+            # max_len - 1 retire cap, but fail loudly BEFORE allocating:
+            # a block granted past the table width belongs to no table
+            # and would leak
+            raise AssertionError(
+                f"row {idx} needs {n_needed} blocks > table width "
+                f"{self.max_blocks_per_seq}")
+        bt = self.block_tables[idx]
+        have = int((bt >= 0).sum())
+        while have < n_needed:
+            b = self.allocator.alloc()
+            if b is None:
+                if not self._evict_for(idx):
+                    return False
+                continue
+            bt[have] = b
+            have += 1
+        return True
+
+    def _maybe_compact(self) -> None:
+        """Copy-on-retire compaction: densify the allocated blocks so the
+        touched span of the pool stays minimal.  One functional
+        gather-then-scatter per cache leaf, so overlapping moves are safe."""
+        if not self.compact_on_retire:
+            return
+        plan = self.allocator.compaction_plan()
+        if plan is None:
+            return
+        src, dst = plan
+        s = jnp.asarray(src, jnp.int32)
+        d = jnp.asarray(dst, jnp.int32)
+        self.cache = jax.tree.map(
+            lambda c: c.at[:, d].set(c[:, s]), self.cache)
+        for i in self._placed():
+            self.block_tables[i] = remap_table(
+                list(self.block_tables[i]), src, dst)
+        self.allocator.commit_compaction()
+        self.stats.compactions += 1
+
+    # -- prefill chunks -------------------------------------------------------
+    def _place(self, req: Request) -> Optional[int]:
+        free = [i for i, r in enumerate(self.rows) if r is None]
+        if not free:
+            return None
+        idx = free[0]
+        self.rows[idx] = _Row(req)
+        self.scheduler.take(req)
+        self.stats.admission_order.append(req.rid)
+        return idx
+
+    def _run_chunk(self, idx: int) -> None:
+        """Advance row ``idx``'s prefill by one chunk.
+
+        Chunks are always exactly ``chunk_size`` tokens so the jitted call
+        never retraces: the final chunk of a prompt *overlaps* already-
+        written positions (re-running the same tokens against the same
+        cache rewrites identical K/V — chunked prefill is deterministic),
+        and prompts shorter than one chunk are LEFT-padded with the write
+        positions pushed negative, which the paged scatter drops."""
+        row = self.rows[idx]
+        req, C = row.req, self.chunk_size
+        S = len(req.prompt)
+        end = min(row.filled + C, S)
+        start = end - C              # < filled on overlap, < 0 on left-pad
+        if not self._ensure_blocks(idx, blocks_for_tokens(end,
+                                                          self.block_size)):
+            return                   # pool dry, no victim: retry next step
+        if self.rows[idx] is not row:
+            return                   # the eviction chain took this row
+        toks = np.zeros(C, np.int32)
+        lo = max(start, 0)
+        toks[C - (end - lo):] = req.prompt[lo:end]
+        bt = jnp.asarray(self.block_tables[idx:idx + 1])
+        logits, self.cache = self._chunk(
+            self.params, self.cache, jnp.asarray(toks[None]),
+            jnp.asarray([start], jnp.int32), bt)
+        row.filled = end
+        self.stats.prefill_chunks += 1
+        if end == S:
+            row.ready = True
+            row.pos = S
+            row.last_tok = int(jnp.argmax(logits[0]))
+            req.tokens.append(row.last_tok)
+            self.stats.prefills += 1
+
+    # -- the engine iteration -------------------------------------------------
+    def _step(self) -> int:
+        """One iteration: plan, run prefill chunks, decode, retire.
+        Returns the number of placed rows.  (``step()`` is the inherited
+        autotuner-installing shell.)"""
+        t0 = self._clock.perf_counter()
+        unfinished = sorted(
+            ((i, self.rows[i].req.rid, self.rows[i].req)
+             for i in self._placed() if not self.rows[i].ready),
+            key=lambda t: t[1])
+        n_free = self.rows.count(None)
+        any_ready = any(r is not None and r.ready for r in self.rows)
+        if not unfinished and not any_ready and not self.scheduler.queue:
+            return 0
+        gated = (self.cost_model is not None
+                 and self.step_budget_s is not None)
+        decode_s = self._predict_decode().step_s \
+            if self.cost_model is not None else 0.0
+        chunk_s = self._predict_chunk().step_s \
+            if self.cost_model is not None else 0.0
+        plan = self.scheduler.plan(
+            unfinished=unfinished, n_free_rows=n_free, any_ready=any_ready,
+            decode_s=decode_s, chunk_s=chunk_s, gated=gated)
+        self.stats.deferred_prefills += plan.deferred
+
+        for item in plan.items:
+            if item.row is None:
+                idx = self._place(item.request)
+                if idx is None:      # an eviction refilled the rows
+                    continue
+            else:
+                idx = item.row
+                if (self.rows[idx] is None
+                        or self.rows[idx].req.rid != item.rid):
+                    continue         # evicted mid-step; replanned later
+            self._run_chunk(idx)
+
+        active = self._decode_phase()
+
+        self.stats.block_occupancy.append(self.allocator.occupancy)
+        # the allocator records the exact intra-step peak (a row can grow
+        # a block AND retire within one _decode_phase; sampling n_in_use
+        # here would miss that high-water mark)
+        self.stats.peak_blocks_in_use = self.allocator.peak_in_use
+        did_work = bool(plan.items) or active
+        if did_work:
+            self.stats.steps += 1
+            if self.cost_model is not None:
+                self.stats.predicted_step_s.append(plan.predicted_s)
+                self.stats.measured_step_s.append(
+                    self._clock.perf_counter() - t0)
+        return len(self._placed())
+
+    def _decode_phase(self) -> int:
+        """Batched decode over the ready rows; rows mid-prefill (or whose
+        block growth must wait) ride along masked out via write_pos=-1."""
+        ready = [i for i in self._placed() if self.rows[i].ready]
+        if not ready:
+            return 0
+        stepping = []
+        for i in ready:
+            row = self.rows[i]
+            if row is None or not row.ready:
+                continue             # evicted by an earlier row's growth
+            need = blocks_for_tokens(row.pos + 1, self.block_size)
+            if self._ensure_blocks(i, need) and self.rows[i] is row:
+                stepping.append((i, row))
+        # a LATER row's block growth may have evicted a row already
+        # collected above — re-validate the whole list before stepping
+        stepping = [(i, row) for i, row in stepping if self.rows[i] is row]
+        if not stepping:
+            return 0
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.full(self.max_batch, -1, np.int32)
+        for i, row in stepping:
+            toks[i, 0] = row.last_tok
+            pos[i] = row.pos
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(self.block_tables))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, row in stepping:
+            req = row.req
+            req.tokens.append(int(nxt[i]))
+            self.stats.decoded_tokens += 1
+            row.last_tok = int(nxt[i])
+            row.pos += 1
+            hit_eos = req.eos_id is not None and nxt[i] == req.eos_id
+            out_of_budget = len(req.tokens) >= req.max_new_tokens
+            out_of_cache = row.pos >= self.max_len - 1
+            if hit_eos or out_of_budget or out_of_cache:
+                self._retire(i)
+        return len(stepping)
+
+    def _retire(self, idx: int) -> None:
+        req = self.rows[idx].req
+        req.finished_s = self._clock.time()
+        self.done[req.rid] = req
+        self._free_row(idx)
+        self.stats.completed += 1
+        self._maybe_compact()
+
+    def run_until_done(self, max_steps: int = 10_000) -> EngineStats:
+        for _ in range(max_steps):
+            active = self.step()
+            if active == 0 and not self.scheduler.queue:
+                break
+        self.allocator.check()
         return self.stats

@@ -1,0 +1,20 @@
+"""Shared pytest wiring: the ``--update-golden`` flag.
+
+``pytest --update-golden`` rewrites the golden files under
+``tests/golden/`` from the CURRENT outputs instead of comparing against
+them — the escape hatch for intentional calibration-format or model
+changes.  Tests that consumed the flag skip with an "updated" notice so a
+rewrite run can never silently pass as a verification run.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/* from current outputs (then skip)")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")

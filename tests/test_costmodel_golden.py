@@ -1,0 +1,103 @@
+"""Golden-file regression for ``CostModel.predict``.
+
+A fixed set of censuses — hand-written decode/prefill/MXU shapes plus the
+paged-attention tunable's analytic census — priced against BOTH shipped
+calibrations, compared field-by-field against ``tests/golden/
+predictions.json``.  Any calibration-loader or layer refactor that shifts
+a price now fails loudly instead of silently re-costing the serving
+engine's admission decisions.  Intentional changes re-baseline with
+``pytest tests/test_costmodel_golden.py --update-golden``.
+"""
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.core.autotune.space import TUNABLES
+from repro.core.costmodel import CostModel
+
+GOLDEN = Path(__file__).parent / "golden" / "predictions.json"
+CALIBRATIONS = ("ampere_a100", "tpu_v5e")
+REL_TOL = 1e-9
+
+# name -> (census, predict kwargs).  Pure literals (no model building), so
+# the golden pins the cost model alone, not the architecture zoo.
+CENSUSES = {
+    "decode_like": (
+        {"flops": 2.0e9, "hbm_bytes": 5.0e8,
+         "op_histogram": {"fusion": 60.0, "dot": 12.0,
+                          "dynamic-update-slice": 4.0, "transpose": 4.0,
+                          "reshape": 8.0, "copy": 2.0}},
+        {}),
+    "prefill_like": (
+        {"flops": 5.0e11, "hbm_bytes": 2.0e9,
+         "collective_bytes_total": 1.0e6,
+         "op_histogram": {"fusion": 90.0, "dot": 18.0, "add": 12.0,
+                          "exponential": 6.0, "all-reduce": 4.0}},
+        {}),
+    "mxu_tile_f32": (
+        {"flops": 1.0e12, "hbm_bytes": 1.0e9,
+         "op_histogram": {"dot": 64.0, "multiply": 64.0, "fusion": 64.0}},
+        {"dtype": "f32", "mxu_shape": (128, 128, 128)}),
+    "paged_decode_bs16": (
+        TUNABLES["paged_attention"].census(
+            {"batch": 8, "heads": 8, "kv_heads": 2, "head_dim": 128,
+             "ctx": 2048}, {"block_size": 16}),
+        {}),
+    "paged_decode_bs128": (
+        TUNABLES["paged_attention"].census(
+            {"batch": 8, "heads": 8, "kv_heads": 2, "head_dim": 128,
+             "ctx": 2048}, {"block_size": 128}),
+        {}),
+}
+
+
+def _compute():
+    out = {}
+    for cal in CALIBRATIONS:
+        model = CostModel.from_named(cal)
+        for name, (census, kw) in CENSUSES.items():
+            p = model.predict(census, **kw)
+            out[f"{cal}/{name}"] = {
+                "step_s": p.step_s,
+                "compute_s": p.compute_s,
+                "memory_s": p.memory_s,
+                "collective_s": p.collective_s,
+                "issue_overhead_s": p.issue_overhead_s,
+                "bottleneck": p.bottleneck,
+                "defaulted_op_count": p.defaulted_op_count,
+            }
+    return out
+
+
+def test_predictions_match_golden(update_golden):
+    got = _compute()
+    if update_golden:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        pytest.skip(f"golden rewritten: {GOLDEN}")
+    assert GOLDEN.exists(), \
+        "no golden file — generate with `pytest --update-golden`"
+    want = json.loads(GOLDEN.read_text())
+    assert sorted(got) == sorted(want), "census/calibration set changed"
+    for key, fields in got.items():
+        for f, v in fields.items():
+            w = want[key][f]
+            if isinstance(v, float):
+                assert math.isclose(v, w, rel_tol=REL_TOL, abs_tol=1e-30), \
+                    f"{key}.{f}: {v} != golden {w}"
+            else:
+                assert v == w, f"{key}.{f}: {v!r} != golden {w!r}"
+
+
+def test_paged_census_prices_the_block_size_trade():
+    """Sanity behind the golden: both shipped calibrations must see the
+    page-size trade at all (different block sizes -> different prices),
+    or tuning block_size through them is meaningless."""
+    for cal in CALIBRATIONS:
+        model = CostModel.from_named(cal)
+        a = model.predict(CENSUSES["paged_decode_bs16"][0]).step_s
+        b = model.predict(CENSUSES["paged_decode_bs128"][0]).step_s
+        assert a > 0 and b > 0
+        assert a != b, cal

@@ -1,0 +1,342 @@
+"""Deterministic engine-simulation harness.
+
+Everything nondeterministic about serving is injected here:
+
+* **SimClock** replaces ``time.time``/``time.perf_counter`` — engines take
+  a ``clock=`` object, so timestamps advance only when the trace driver
+  says so and every submitted/finished time is an exact scripted value.
+* **FakeModel** replaces the transformer: decode is a pure-jnp arithmetic
+  rule (next token = last token + 1 mod vocab), so the *expected* output
+  of every request is computable in the test, and the shapes the engine
+  feeds the model are recorded at trace time (jit traces once per shape —
+  the recording IS the shape census).
+* **FakeCostModel** replaces calibrated pricing with constants, making
+  the scheduler's budget arithmetic — and therefore the exact
+  ``deferred_prefills`` count per step — a hand-checkable computation.
+
+Scheduler invariants pinned: no request lost, FIFO admission, exact
+deferral accounting, every evicted request eventually completes, and the
+slot engine's corrected ``deferred_prefills`` semantics (the regression
+from the old ``min(len(queue), len(free)-idx)`` over-count).
+"""
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models.zoo import build_model
+from repro.serve import PagedServingEngine, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+
+
+class SimClock:
+    """Injected in place of the ``time`` module: advances only on demand."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def time(self) -> float:
+        return self.t
+
+    def perf_counter(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@dataclasses.dataclass
+class _Pred:
+    step_s: float
+
+
+class FakeCostModel:
+    """Constant (or census-derived) prices; only ``.step_s`` is consumed."""
+
+    def __init__(self, decode_s=1.0, prefill_s=1.0, predict_fn=None):
+        self.decode_s = decode_s
+        self.prefill_s = prefill_s
+        self.predict_fn = predict_fn
+
+    def predict(self, census, **kw):
+        if self.predict_fn is not None:
+            return _Pred(self.predict_fn(census))
+        return _Pred(self.prefill_s)
+
+    def predict_compiled(self, compiled_text, **kw):
+        return _Pred(self.decode_s)
+
+
+class FakeModel:
+    """Minimal paged-decodeable model: next token = last + 1 (mod vocab).
+
+    ``decode_shapes`` records every (tokens, block_tables) shape pair the
+    engine traces — the recorded prefill/decode shape census.
+    """
+
+    def __init__(self, vocab=97, cfg=None):
+        self.vocab = vocab
+        self.cfg = cfg if cfg is not None else reduced(
+            ARCHS["gemma2-2b"], n_layers=2, vocab_size=vocab)
+        self.decode_shapes = []
+
+    def decode(self, params, cache, tokens, pos, block_tables=None):
+        self.decode_shapes.append(
+            (tuple(tokens.shape),
+             None if block_tables is None else tuple(block_tables.shape)))
+        nxt = (tokens[:, -1] + 1) % self.vocab
+        return jax.nn.one_hot(nxt, self.vocab), cache
+
+    def init_paged_cache(self, n_blocks, block_size):
+        shape = (1, n_blocks, block_size, 1, 1)
+        return {"k": jnp.zeros(shape, jnp.bfloat16),
+                "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def expected_tokens(prompt, n, vocab, eos_id=None):
+    """What FakeModel greedily generates for ``prompt``."""
+    out, t = [], int(prompt[-1])
+    for _ in range(n):
+        t = (t + 1) % vocab
+        out.append(t)
+        if eos_id is not None and t == eos_id:
+            break
+    return out
+
+
+def drive(engine, clock, arrivals, dt=1.0, max_steps=500):
+    """Scripted-trace driver: submit each (t, prompt, max_new, eos) at its
+    arrival time, stepping the engine once per clock tick."""
+    pending = deque(sorted(arrivals, key=lambda a: a[0]))
+    rids = {}
+    for _ in range(max_steps):
+        while pending and pending[0][0] <= clock.t:
+            t, prompt, max_new, eos = pending.popleft()
+            rids[engine.submit(np.asarray(prompt, np.int32),
+                               max_new_tokens=max_new, eos_id=eos)] = t
+        active = engine.step()
+        clock.advance(dt)
+        if not pending and active == 0 and not len(engine.queue):
+            break
+    return rids
+
+
+def paged(model, clock=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("chunk_size", 4)
+    return PagedServingEngine(model, params=None, clock=clock, **kw)
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def test_no_request_lost_and_outputs_exact():
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock)
+    rng = np.random.default_rng(0)
+    arrivals = [(float(i // 3), rng.integers(0, 97, size=int(l)), 4, None)
+                for i, l in enumerate(rng.integers(1, 12, size=9))]
+    rids = drive(eng, clock, arrivals)
+    assert eng.stats.completed == len(arrivals)      # no request lost
+    assert sorted(eng.done) == sorted(rids)
+    for rid, t in rids.items():
+        req = eng.done[rid]
+        assert req.tokens == expected_tokens(req.prompt, 4, 97)
+        # timestamps are scripted values, not wall time
+        assert req.submitted_s == t
+        assert req.finished_s == int(req.finished_s) >= t
+
+
+def test_fifo_admission_and_eos_retire():
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock)
+    arrivals = [(0.0, [5, 6, 7], 8, 10),     # eos after 3 tokens (8,9,10)
+                (0.0, [20], 8, None),
+                (1.0, [40, 41], 8, None)]
+    rids = drive(eng, clock, arrivals)
+    assert eng.stats.completed == 3
+    # FIFO: admission order == submission (rid) order, no preemption here
+    assert eng.stats.admission_order == sorted(rids)
+    first = eng.done[min(rids)]
+    assert first.tokens == [8, 9, 10]
+    assert first.eos_id == 10
+
+
+def test_recorded_shapes_are_the_two_engine_calls():
+    """The fake model's trace census: chunked prefill runs [1, chunk] and
+    batched decode [max_batch, 1], each against a full-width block table —
+    and nothing else."""
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock, max_batch=3, chunk_size=4)
+    drive(eng, clock, [(0.0, list(range(1, 7)), 3, None)])
+    nb = eng.max_blocks_per_seq
+    assert set(model.decode_shapes) == {((1, 4), (1, nb)),
+                                        ((3, 1), (3, nb))}
+
+
+def test_deferred_prefills_exact_accounting():
+    """Hand-checkable budget arithmetic (decode=1.0, chunk=1.0,
+    budget=2.5): 3 requests of exactly 2 chunks each defer one candidate
+    in each of the first two planning steps and nothing afterwards."""
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock, chunk_size=4,
+                cost_model=FakeCostModel(decode_s=1.0, prefill_s=1.0),
+                step_budget_s=2.5)
+    prompts = [list(range(10, 18)), list(range(30, 38)),
+               list(range(50, 58))]           # 8 tokens = 2 chunks each
+    for p in prompts:
+        eng.submit(np.asarray(p, np.int32), max_new_tokens=3)
+
+    eng.step()   # chunks r0+r1 fit (0+1+1 <= 2.5); r2 deferred
+    assert eng.stats.deferred_prefills == 1
+    assert eng.stats.prefill_chunks == 2
+    eng.step()   # r0+r1 final chunks; r2 deferred again
+    assert eng.stats.deferred_prefills == 2
+    assert eng.stats.prefills == 2            # r0, r1 ready
+    eng.step()   # decode(1.0) + r2 first chunk (always-admit-one)
+    assert eng.stats.deferred_prefills == 2
+    assert eng.stats.prefill_chunks == 5
+    eng.run_until_done()
+    assert eng.stats.completed == 3
+    assert eng.stats.deferred_prefills == 2   # nothing counted after
+    assert eng.stats.predicted_step_s[:3] == [2.0, 2.0, 2.0]
+    for rid, req in eng.done.items():
+        assert req.tokens == expected_tokens(req.prompt, 3, 97)
+
+
+def test_evicted_requests_eventually_complete():
+    """Pool of exactly one max_len sequence: concurrent requests must
+    preempt each other, and every evicted request still completes with
+    the right tokens (greedy replay is deterministic)."""
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock, max_batch=2, max_len=16, block_size=4,
+                n_blocks=4, chunk_size=4)
+    arrivals = [(0.0, list(range(10, 18)), 4, None),
+                (0.0, list(range(30, 38)), 4, None),
+                (2.0, list(range(50, 57)), 4, None)]
+    rids = drive(eng, clock, arrivals, max_steps=200)
+    assert eng.stats.completed == 3
+    assert eng.stats.preemptions > 0          # evictions actually happened
+    for rid in rids:
+        req = eng.done[rid]
+        assert req.tokens == expected_tokens(req.prompt, 4, 97)
+    # leak-free teardown: every block back on the free list
+    eng.allocator.check()
+    assert eng.allocator.n_free == eng.n_blocks
+    assert eng.stats.peak_blocks_in_use == eng.n_blocks
+
+
+def test_decode_phase_eviction_of_collected_row_does_not_crash():
+    """Regression: a ready row already collected for this decode step can
+    be evicted by a LATER ready row's block growth in the same loop — the
+    engine must drop it from the batch, not dereference its cleared row
+    (the original code crashed with AttributeError on rows[i].last_tok).
+    Also pins delivered-token accounting: eviction replays must not
+    double-count decoded_tokens."""
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock, max_batch=3, max_len=16, block_size=4,
+                n_blocks=6, chunk_size=4)
+    rng = np.random.default_rng(1)
+    arrivals = [(float(i // 3), rng.integers(0, 97, size=int(l)), 4, None)
+                for i, l in enumerate(rng.integers(4, 13, size=9))]
+    rids = drive(eng, clock, arrivals, max_steps=400)
+    assert eng.stats.completed == 9
+    assert eng.stats.preemptions > 0
+    for rid in rids:
+        req = eng.done[rid]
+        assert req.tokens == expected_tokens(req.prompt, 4, 97)
+    # delivered tokens == what completed requests actually hold: replays
+    # of evicted work were rolled back, not counted twice
+    delivered = sum(len(r.tokens) - 1 for r in eng.done.values())
+    assert eng.stats.decoded_tokens == delivered
+    assert eng.stats.prefills == 9
+    assert eng.allocator.n_free == eng.n_blocks
+
+
+def test_overlong_prompts_rejected_at_submit(tiny_lm):
+    """A prompt that cannot fit max_len must be rejected at submit on
+    BOTH engines — mid-trace it would overrun the paged engine's fixed-
+    width block table and strand an allocated block outside any table."""
+    model, params = tiny_lm
+    eng = PagedServingEngine(model, params, max_batch=2, max_len=16,
+                             block_size=4)
+    with pytest.raises(ValueError, match="cannot fit"):
+        eng.submit(np.arange(16, dtype=np.int32))
+    slot = ServingEngine(model, params, max_batch=2, max_len=16)
+    with pytest.raises(ValueError, match="cannot fit"):
+        slot.submit(np.arange(20, dtype=np.int32))
+    # one-under-the-cap is fine and completes
+    rid = eng.submit(np.arange(15, dtype=np.int32), max_new_tokens=4)
+    eng.run_until_done()
+    assert rid in eng.done
+
+
+def test_block_occupancy_stats_tracked():
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock)
+    drive(eng, clock, [(0.0, [3, 4, 5, 6, 7], 4, None)])
+    assert eng.stats.peak_blocks_in_use >= 2
+    assert len(eng.stats.block_occupancy) == eng.stats.steps
+    assert all(0.0 <= o <= 1.0 for o in eng.stats.block_occupancy)
+    assert max(eng.stats.block_occupancy) > 0
+
+
+# ---------------------------------------------------------------------------
+# the slot engine's corrected deferred_prefills semantics (regression)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=64)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_slot_deferred_count_excludes_requests_that_would_fit(tiny_lm):
+    """Regression for the old over-count: with a huge prompt at the queue
+    head and a tiny one behind it, only the huge one is budget-deferred —
+    the tiny one (which would have fit) is blocked by FIFO order, not by
+    the budget, and must NOT be counted.  The old code bulk-counted
+    min(len(queue), free slots) = 2."""
+    model, params = tiny_lm
+    # price prefills proportional to prompt length, decode at ~0
+    cm = FakeCostModel(decode_s=0.0,
+                       predict_fn=lambda census: census["flops"])
+    probe = ServingEngine(model, params, max_batch=4, max_len=96,
+                          cost_model=cm)
+    cost = lambda n: probe._predict_prefill(n).step_s
+    budget = cost(4) + cost(6) + 1.0          # fits small+tiny, not huge
+    assert cost(64) > budget
+
+    eng = ServingEngine(model, params, max_batch=4, max_len=96,
+                        cost_model=cm, step_budget_s=budget)
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=2)    # admitted
+    eng.submit(np.arange(64, dtype=np.int32), max_new_tokens=2)   # too big
+    eng.submit(np.arange(6, dtype=np.int32), max_new_tokens=2)    # would fit
+    eng.step()
+    assert eng.stats.prefills == 1
+    assert eng.stats.deferred_prefills == 1   # old code counted 2
+    # FIFO is preserved: the tiny request is NOT admitted around the head
+    assert len(eng.queue) == 2
+    stats = eng.run_until_done()
+    assert stats.completed == 3
