@@ -1,0 +1,72 @@
+"""Serving-throughput benchmark — the perf-trajectory recorder.
+
+Plays one deterministic mixed-length trace through BOTH engines (slot and
+paged), each on its legacy blocking path (``fused=False``) and on the
+fused decode hot path (on-device sampling, donated caches, pipelined
+steps), and emits a schema-versioned ``BENCH_5.json`` so the repo's
+serving-performance trajectory is recorded per change instead of living
+in commit messages:
+
+  python benchmarks/bench_serve.py --quick --out results/bench/BENCH_5.json
+
+Fields per engine: baseline/fused tok/s + speedup, steps, host syncs per
+step, resident KV bytes, ``identical_tokens`` (greedy ids must match
+byte-for-byte — the hot path is an implementation detail, not a
+semantics change), and the cost model's predicted per-step HBM / host-
+transfer byte savings.  CI runs ``--quick`` and fails when any engine's
+``identical_tokens`` is False (rc=1).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+SCHEMA = "bench_serve/v1"
+BENCH_ID = 5          # the PR index this artifact started recording at
+
+
+def run(quick: bool) -> dict:
+    from repro.core.campaign.registry import run_decode_hotpath_cell
+    doc = {"schema": SCHEMA, "bench_id": BENCH_ID, "quick": bool(quick),
+           "engines": {}}
+    for engine in ("slot", "paged"):
+        doc["engines"][engine] = run_decode_hotpath_cell(
+            {"engine": engine}, quick=quick)
+    doc["identical_tokens"] = all(
+        m["identical_tokens"] for m in doc["engines"].values())
+    return doc
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--quick", action="store_true",
+                   help="short trace (the CI smoke mode)")
+    p.add_argument("--out", default="results/bench/BENCH_5.json",
+                   help="artifact path (schema-versioned JSON)")
+    args = p.parse_args(argv)
+
+    doc = run(quick=args.quick)
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True))
+    for engine, m in doc["engines"].items():
+        print(f"{engine}: baseline={m['baseline_tok_per_s']:.1f} tok/s "
+              f"fused={m['fused_tok_per_s']:.1f} tok/s "
+              f"(x{m['speedup']:.2f}) "
+              f"syncs/step {m['baseline_syncs_per_step']:.2f} -> "
+              f"{m['fused_syncs_per_step']:.2f}  "
+              f"kv_bytes={m['fused_kv_bytes']}  "
+              f"identical_tokens={m['identical_tokens']}")
+    print(f"wrote {out}")
+    return 0 if doc["identical_tokens"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,7 +42,9 @@ def main():
           f"{stats.decoded_tokens} tokens in {dt:.2f}s "
           f"({stats.decoded_tokens/dt:.1f} tok/s, "
           f"{stats.steps} decode steps, {stats.prefills} prefills, "
-          f"{stats.deferred_prefills} admissions deferred)")
+          f"{stats.deferred_prefills} admissions deferred, "
+          f"{stats.host_syncs/max(stats.steps, 1):.2f} host syncs/step "
+          "on the fused hot path)")
     if stats.predicted_step_s:
         print(f"  predicted step time: {min(stats.predicted_step_s):.2e}-"
               f"{max(stats.predicted_step_s):.2e}s "

@@ -229,7 +229,10 @@ def _pa_vmem(shapes, cfg, dtype):
     it = _dtype_bytes(dtype)
     D, bs = shapes["head_dim"], cfg["block_size"]
     ctx = shapes["ctx"]
-    kv = 2 * bs * D * it                   # one K + one V page
+    # the HBM-resident lowering's working set: K and V pages land in a
+    # TWO-slot VMEM scratch each (double buffering — page j+1's DMA is
+    # in flight while page j is consumed), never the staged pool
+    kv = 2 * 2 * bs * D * it               # 2 K-page + 2 V-page slots
     q_o = D * (4 + it)                     # q in f32 + output row
     state = (D + 2) * 4                    # acc + (m, l), f32
     scores = bs * 4                        # s/p transient

@@ -19,6 +19,10 @@ arXiv:2208.11174) onto this backend's measurement primitives:
   * ``paged_serve``          - the memory model applied to serving: slot vs
                                paged KV cache on the same request trace
                                (tokens/s, resident KV bytes, preemptions)
+  * ``decode_hotpath``       - the transfer/donation model applied to the
+                               decode loop: legacy blocking path vs the
+                               fused one (on-device sampling, donated
+                               caches, pipelined steps) on the same trace
 
 Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
 dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
@@ -267,6 +271,85 @@ def run_paged_serve_cell(params: Dict[str, Any], quick: bool = False
     }
 
 
+def run_decode_hotpath_cell(params: Dict[str, Any], quick: bool = False
+                            ) -> Dict[str, Any]:
+    """Serve one deterministic trace through an engine's legacy blocking
+    path (``fused=False``: fresh uploads, [B, vocab] logits synced,
+    undonated cache) and through the fused hot path (on-device sampling,
+    donated caches, pipelined steps) and compare: tokens/s, host syncs
+    per step, resident KV bytes, greedy-token equality, plus the analytic
+    cost model's predicted per-step byte savings."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ShapeCell
+    from repro.core.costmodel import analytic
+    from repro.models.zoo import build_model
+    from repro.serve import PagedServingEngine, ServingEngine
+
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    weights = model.init(jax.random.PRNGKey(0))
+    n_req = 6 if quick else int(params.get("n_requests", 16))
+    max_batch, max_len = 4, 64
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(1, 33))).astype(np.int32)
+               for _ in range(n_req)]
+
+    def build(fused):
+        if params["engine"] == "paged":
+            return PagedServingEngine(model, weights, max_batch=max_batch,
+                                      max_len=max_len, block_size=8,
+                                      chunk_size=16, fused=fused)
+        return ServingEngine(model, weights, max_batch=max_batch,
+                             max_len=max_len, fused=fused)
+
+    out: Dict[str, Any] = {"engine": params["engine"]}
+    done = {}
+    warmup = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+              for _ in range(2)]
+    for label, fused in (("baseline", False), ("fused", True)):
+        eng = build(fused)
+        # warm the engine first: each instance jits/AOT-compiles its own
+        # step closures, and a cold timed region would mostly measure the
+        # compiler (and charge the fused path for its extra jitted fns),
+        # not steady-state decode — the thing this artifact tracks
+        for p in warmup:
+            eng.submit(p, max_new_tokens=4)
+        eng.run_until_done(max_steps=20_000)
+        steps0, dec0 = eng.stats.steps, eng.stats.decoded_tokens
+        syncs0 = eng.stats.host_syncs
+        rids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        t0 = time.perf_counter()
+        stats = eng.run_until_done(max_steps=20_000)
+        wall = time.perf_counter() - t0
+        done[label] = [eng.done[r].tokens for r in rids]
+        steps = stats.steps - steps0
+        out[f"{label}_tok_per_s"] = ((stats.decoded_tokens - dec0)
+                                     / max(wall, 1e-9))
+        out[f"{label}_steps"] = steps
+        out[f"{label}_syncs_per_step"] = ((stats.host_syncs - syncs0)
+                                          / max(steps, 1))
+        out[f"{label}_kv_bytes"] = eng.kv_cache_bytes()
+    out["identical_tokens"] = done["baseline"] == done["fused"]
+    out["speedup"] = out["fused_tok_per_s"] / max(out["baseline_tok_per_s"],
+                                                  1e-9)
+    # the cost model's view of what the fused path removed per step
+    cell = ShapeCell("hotpath", "decode", max_len, max_batch)
+    legacy_b = analytic.analytic_serve_bytes(cfg, cell, 1, n_model=1)
+    fused_b = analytic.analytic_serve_bytes(cfg, cell, 1, n_model=1,
+                                            donated=True)
+    out["predicted_hbm_bytes_saved"] = legacy_b - fused_b
+    out["predicted_boundary_bytes_saved"] = (
+        analytic.decode_boundary_bytes(cfg, cell)
+        - analytic.decode_boundary_bytes(cfg, cell, device_sampling=True))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # grids
 # ---------------------------------------------------------------------------
@@ -396,6 +479,17 @@ register(Experiment(
     runner=run_paged_serve_cell,
     cost_per_cell_s=30.0,
     tags=("serve", "paging", "memory"),
+))
+
+register(Experiment(
+    name="decode_hotpath",
+    description="legacy blocking decode vs the fused hot path (on-device "
+                "sampling, donated caches, pipelined steps) on one trace: "
+                "tok/s, host syncs/step, KV bytes, greedy equality",
+    grid={"engine": ("slot", "paged")},
+    runner=run_decode_hotpath_cell,
+    cost_per_cell_s=30.0,
+    tags=("serve", "hotpath", "memory"),
 ))
 
 register(Experiment(

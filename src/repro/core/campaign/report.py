@@ -134,6 +134,25 @@ def paged_serve_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def decode_hotpath_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Legacy-vs-fused decode hot path from a ``decode_hotpath`` result
+    file: throughput and host-sync rate side by side, the correctness
+    column CI greps, and the cost model's predicted byte savings."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        derived = (f"baseline_tok_s={m['baseline_tok_per_s']:.1f};"
+                   f"fused_tok_s={m['fused_tok_per_s']:.1f};"
+                   f"speedup={m['speedup']:.2f};"
+                   f"baseline_syncs_per_step={m['baseline_syncs_per_step']:.2f};"
+                   f"fused_syncs_per_step={m['fused_syncs_per_step']:.2f};"
+                   f"identical={m['identical_tokens']};"
+                   f"kv_bytes={m['fused_kv_bytes']};"
+                   f"pred_hbm_saved={m['predicted_hbm_bytes_saved']:.3e};"
+                   f"pred_boundary_saved={m['predicted_boundary_bytes_saved']:.3e}")
+        rows.append((f"decode_hotpath/{p['engine']}", 0.0, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -142,6 +161,7 @@ _TABLE_FOR = {
     "roofline_calibration": roofline_table,
     "autotune": autotune_table,
     "paged_serve": paged_serve_table,
+    "decode_hotpath": decode_hotpath_table,
 }
 
 

@@ -60,9 +60,39 @@ def analytic_train_bytes(cfg, cell, n_devices: int, accum: int,
     return weights + grads + opt + acts + logits
 
 
-def analytic_serve_bytes(cfg, cell, n_devices: int,
-                         n_model: int = 16) -> float:
-    """Per-device HBM bytes for one serve step (prefill or decode)."""
+def decode_step_token_bytes(cfg, cell) -> float:
+    """KV bytes one decode step *writes*: each sequence's single new
+    token per layer — the only cache traffic a donated in-place update
+    adds on top of the context read."""
+    import dataclasses
+    return cache_bytes(cfg, dataclasses.replace(cell, seq_len=1))
+
+
+def decode_boundary_bytes(cfg, cell, device_sampling: bool = False) -> float:
+    """Bytes a decode step hands back across the jit/step boundary to the
+    host program.  The legacy path materializes the full ``[B, vocab]``
+    f32 logit matrix as a step output for host-side eager sampling —
+    an HBM round-trip plus an extra eager argmax dispatch and a forced
+    sync per token (on host-memory backends it is literally the host
+    transfer).  With sampling fused into the step, only the ``[2, B]``
+    int32 token echo crosses (outputs AND echoed inputs in one buffer,
+    so prefill first-tokens need no transfer of their own)."""
+    B = cell.global_batch
+    if device_sampling:
+        return 2.0 * B * 4.0
+    return B * cfg.vocab_size * 4.0
+
+
+def analytic_serve_bytes(cfg, cell, n_devices: int, n_model: int = 16,
+                         donated: bool = False) -> float:
+    """Per-device HBM bytes for one serve step (prefill or decode).
+
+    ``donated`` models the fused hot path's in-place cache update: an
+    undonated functional step reads the whole decode cache AND writes a
+    complete second copy (2x cache bytes); a donated step reads the
+    context but writes only each sequence's new token slice.  The
+    default (False) is the legacy engines' traffic — what the shipped
+    golden predictions were recorded against."""
     P = _param_bytes(cfg)
     n_model = max(min(n_model, n_devices), 1)
     P_stream = P / n_model * 2 / 4        # bf16 weights, TP sharded
@@ -77,16 +107,22 @@ def analytic_serve_bytes(cfg, cell, n_devices: int,
         acts = 2 * cfg.n_layers * tokens_dev * d * 2
         cache = cache_bytes(cfg, cell) / n_devices
         return P_stream + acts + cache
-    # decode: read the whole cache + stream weights once
-    cache = 2 * cache_bytes(cfg, cell) / n_devices
+    if donated:
+        # decode, fused: read the context once, write one token per seq
+        cache = (cache_bytes(cfg, cell)
+                 + decode_step_token_bytes(cfg, cell)) / n_devices
+    else:
+        # decode, legacy: read the whole cache + materialize a second one
+        cache = 2 * cache_bytes(cfg, cell) / n_devices
     return P_stream + cache
 
 
 def analytic_step_bytes(cfg, cell, n_devices: int, accum: int = 1,
-                        n_model: int = 16) -> float:
+                        n_model: int = 16, donated: bool = False) -> float:
     if cell.kind == "train":
         return analytic_train_bytes(cfg, cell, n_devices, accum, n_model)
-    return analytic_serve_bytes(cfg, cell, n_devices, n_model)
+    return analytic_serve_bytes(cfg, cell, n_devices, n_model,
+                                donated=donated)
 
 
 # rough top-level-op count per transformer layer in an optimized module
@@ -96,7 +132,8 @@ _OPS_PER_LAYER = {"fusion": 30.0, "dot": 6.0, "dynamic-update-slice": 2.0,
 
 
 def analytic_census(cfg, cell, n_devices: int, n_model: int = 16,
-                    accum: int = 1) -> Dict[str, Any]:
+                    accum: int = 1, donated: bool = False,
+                    device_sampling: bool = False) -> Dict[str, Any]:
     """A census-shaped dict (flops / hbm_bytes / collective bytes /
     op_histogram) for a candidate sharding plan, from first principles.
 
@@ -105,6 +142,14 @@ def analytic_census(cfg, cell, n_devices: int, n_model: int = 16,
         data axis: 3 x (P/n_model) bf16 bytes x (d-1)/d;
       * TP activation combines over the model axis: 2 collectives/layer of
         per-device token activations x (m-1)/m.
+
+    ``donated`` / ``device_sampling`` price the fused decode hot path:
+    donation removes the second-cache materialization from ``hbm_bytes``
+    (write only the new token slice), and on-device sampling shrinks
+    ``boundary_bytes`` from the ``[B, vocab]`` f32 logit matrix handed
+    to host-side sampling down to the ``[2, B]`` int32 token echo.  Both
+    default to the legacy engines' traffic so recorded golden
+    predictions are unchanged.
     """
     n_model = max(min(n_model, n_devices), 1)
     n_data = max(n_devices // n_model, 1)
@@ -134,11 +179,18 @@ def analytic_census(cfg, cell, n_devices: int, n_model: int = 16,
         hist["all-reduce"] = 2.0 * cfg.n_layers
         hist["all-gather"] = float(cfg.n_layers)
 
-    return {
+    out = {
         "flops": flops_dev,
         "hbm_bytes": analytic_step_bytes(cfg, cell, n_devices, accum,
-                                         n_model),
+                                         n_model, donated=donated),
         "collective_bytes_total": wire,
         "op_histogram": hist,
         "model_flops_global": flops_global,
     }
+    if cell.kind == "decode":
+        # what crosses the step boundary to the host program (informational:
+        # the roofline terms do not price it, but predicted-vs-measured
+        # step comparisons and the decode_hotpath experiment read it)
+        out["boundary_bytes"] = decode_boundary_bytes(
+            cfg, cell, device_sampling=device_sampling)
+    return out

@@ -80,24 +80,34 @@ def flash_attention(q, k, v, causal=True, window=None, softcap=None,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
-                                             "interpret"))
+                                             "interpret", "hbm"))
 def _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale, window,
-            softcap, interpret):
-    return _pa.paged_attention(q, k_pages, v_pages, block_tables,
-                               context_lens, scale=scale, window=window,
-                               softcap=softcap, interpret=interpret)
+            softcap, interpret, hbm):
+    fn = _pa.paged_attention_hbm if hbm else _pa.paged_attention
+    return fn(q, k_pages, v_pages, block_tables, context_lens, scale=scale,
+              window=window, softcap=softcap, interpret=interpret)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
-                    scale=None, window=None, softcap=None, interpret=None):
+                    scale=None, window=None, softcap=None, interpret=None,
+                    hbm=None):
     """Paged decode attention.  Unlike the other tunables, the tunable axis
     (``block_size``) is a CACHE-LAYOUT parameter, fixed here by
     ``k_pages.shape[1]`` — the paged serving engine consults the tuning
     cache (``Autotuner.config_for('paged_attention', ...)``) when it lays
-    out the block pool, not at dispatch time."""
+    out the block pool, not at dispatch time.
+
+    ``hbm`` selects the HBM-resident lowering (the pool stays in ``ANY``
+    memory space; pages are double-buffered into VMEM per iteration) —
+    the default on real TPUs, where staging a serving-sized pool into
+    VMEM cannot fly.  Off-TPU the staged lowering stays the default
+    (interpret-mode DMA is slower); pass ``hbm=True`` to exercise the
+    production path under interpret mode (what CPU CI does)."""
     interpret = _default_interpret() if interpret is None else interpret
+    if hbm is None:
+        hbm = jax.default_backend() == "tpu"
     return _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale,
-                   window, softcap, interpret)
+                   window, softcap, interpret, bool(hbm))
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

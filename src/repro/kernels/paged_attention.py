@@ -20,13 +20,22 @@ CPU CI asserts against); the model-side reference path used by the paged
 serving engine lives in ``models.layers.attention`` (it also handles the
 paged *write*).
 
-VMEM caveat: the in_specs below declare the whole page pool as one block
-per grid cell — exact in interpret mode and fine for CI-sized pools, but
-a production Mosaic lowering of a large pool should keep the pages in
-HBM/ANY memory space and DMA the table-selected page per loop iteration
-instead.  The autotuner's ``space._pa_vmem`` deliberately prices that
-pipelined working set (one K page + one V page + the q/acc rows), i.e.
-the footprint the kernel is *meant* to have, not the staged pool.
+Two lowerings share one wrapper signature:
+
+* ``paged_attention`` — the in_specs declare the whole page pool as one
+  block per grid cell.  Exact in interpret mode and fine for CI-sized
+  pools, but it stages the *pool* into VMEM.
+* ``paged_attention_hbm`` — the HBM-resident lowering: ``k_pages`` /
+  ``v_pages`` stay in ``ANY``/HBM memory space and each loop iteration
+  async-copies only the table-selected page into a double-buffered VMEM
+  scratch (page ``j+1``'s DMA is issued before page ``j`` is consumed),
+  so VMEM holds exactly two K pages + two V pages + the q/acc rows —
+  the pipelined working set the autotuner's ``space._pa_vmem`` prices,
+  independent of pool size.
+
+``kernels.ops.paged_attention`` routes to the HBM lowering on real TPUs
+(and on request in interpret mode, which CPU CI asserts against the
+oracle); the staged lowering remains the small-pool/debug path.
 """
 from __future__ import annotations
 
@@ -35,6 +44,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0e38
 
@@ -106,6 +116,115 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
                          lambda b, h, g=group: (0, 0, h // g, 0)),
             pl.BlockSpec((P, bs, 1, D),
                          lambda b, h, g=group: (0, 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(q,
+      jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
+      k_pages, v_pages)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the HBM-resident lowering
+# ---------------------------------------------------------------------------
+
+
+def _pa_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, o_ref, *, scale,
+                   window, softcap, block_size, n_pages, group, kv_dtype):
+    """Same online-softmax recurrence as ``_pa_kernel``, but ``k_hbm`` /
+    ``v_hbm`` are unblocked ``ANY``-space refs of the WHOLE pool: each
+    iteration DMAs the table-selected page (with the GQA head collapsed
+    in the copy's source slice) into one slot of a two-slot VMEM scratch,
+    issuing page ``j+1``'s copies before waiting on page ``j`` so the
+    gather overlaps the compute."""
+    q = q_ref[0].astype(jnp.float32) * scale              # [1, D]
+    D = q.shape[-1]
+    ctx = ctx_ref[0, 0]
+    n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
+    kh = pl.program_id(1) // group                        # GQA panel
+
+    def body(k_buf, v_buf, k_sem, v_sem):
+        def dma(buf, hbm, sem, slot, j):
+            pid = jnp.clip(bt_ref[0, j], 0, n_pages - 1)
+            return pltpu.make_async_copy(hbm.at[pid, :, kh, :],
+                                         buf.at[slot], sem.at[slot])
+
+        @pl.when(n_valid > 0)
+        def _():
+            dma(k_buf, k_hbm, k_sem, 0, 0).start()
+            dma(v_buf, v_hbm, v_sem, 0, 0).start()
+
+        def step(j, carry):
+            m, l, acc = carry
+            slot = jax.lax.rem(j, 2)
+            nxt = jax.lax.rem(j + 1, 2)
+
+            @pl.when(j + 1 < n_valid)
+            def _():
+                dma(k_buf, k_hbm, k_sem, nxt, j + 1).start()
+                dma(v_buf, v_hbm, v_sem, nxt, j + 1).start()
+
+            dma(k_buf, k_hbm, k_sem, slot, j).wait()
+            dma(v_buf, v_hbm, v_sem, slot, j).wait()
+            k = k_buf[slot].astype(jnp.float32)           # [bs, D]
+            v = v_buf[slot].astype(jnp.float32)
+            raw = bt_ref[0, j]
+            s = q @ k.T                                   # [1, bs]
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+            mask = (k_pos < ctx) & (raw >= 0)             # causal by layout
+            if window is not None:
+                mask &= (ctx - 1 - k_pos) < window
+            s = jnp.where(mask[None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[:, None] + p @ v
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((1,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((1,), jnp.float32)
+        acc0 = jnp.zeros((1, D), jnp.float32)
+        _, l, acc = jax.lax.fori_loop(0, n_valid, step, (m0, l0, acc0))
+        o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+    pl.run_scoped(
+        body,
+        k_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), kv_dtype),
+        v_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), kv_dtype),
+        k_sem=pltpu.SemaphoreType.DMA((2,)),
+        v_sem=pltpu.SemaphoreType.DMA((2,)))
+
+
+def paged_attention_hbm(q, k_pages, v_pages, block_tables, context_lens, *,
+                        scale=None, window=None, softcap=None,
+                        interpret=False):
+    """``paged_attention`` with the page pool kept in HBM (``ANY`` memory
+    space) and per-page double-buffered async copies — the production
+    lowering for pools far larger than VMEM.  Same contract and oracle
+    (``ref.paged_attention_ref``) as the staged lowering."""
+    B, H, D = q.shape
+    P, bs, KH, _ = k_pages.shape
+    NB = block_tables.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    group = H // KH
+
+    out = pl.pallas_call(
+        functools.partial(_pa_hbm_kernel, scale=scale, window=window,
+                          softcap=softcap, block_size=bs, n_pages=P,
+                          group=group, kv_dtype=k_pages.dtype),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, NB), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
         ],
         out_specs=pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),

@@ -308,6 +308,20 @@ def _prefill_pad_cache(cache_layer, max_len):
             for k, v in cache_layer.items()}
 
 
+def _last_pos_head(x, mode):
+    """The last-position logit head: every non-train call (prefill, decode,
+    chunked-prefill-through-decode) unembeds ONLY the final position.
+
+    This slice is the contract the fused serving hot path builds on: with
+    the trunk output reduced to ``[B, 1, D]`` before the unembed, a fused
+    ``decode_step`` (``models.zoo``) can argmax ``[B, 1, V] -> [B]``
+    entirely on device and a serving engine moves 4 bytes per sequence
+    across the host boundary instead of a ``[B, V]`` logit row."""
+    if mode != "train" and x.shape[1] > 1:
+        return x[:, -1:, :]
+    return x
+
+
 def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
              write_pos=None, block_tables=None, max_len=None, remat=True):
     """Run the LM trunk.
@@ -413,11 +427,7 @@ def lm_apply(params, cfg, *, tokens, mode, prefix_embeds=None, cache=None,
         params["ln_f"], x, cfg.norm_eps)
     if n_prefix and mode != "decode":
         x = x[:, n_prefix:, :]
-    if mode != "train" and x.shape[1] > 1:
-        # only the last position's logits are ever used after a prefill or
-        # a chunked-prefill decode call; unembedding the whole chunk would
-        # materialize [B,S,V] for nothing
-        x = x[:, -1:, :]
+    x = _last_pos_head(x, mode)
     logits = basic.unembed(params["embed"], x, cdt, cfg.logit_softcap,
                            vocab=cfg.vocab_size)
 

@@ -8,6 +8,7 @@
   loss(params, batch)               -> (scalar loss, aux dict)
   prefill(params, batch, max_len)   -> (last_logits, cache)
   decode(params, cache, tokens,pos) -> (logits, new cache)
+  decode_step(params, cache, tokens, pos) -> (next_tokens, new cache)
   init_cache(batch, max_len)        -> decode cache
   cache_specs(batch_axes, seq_axis) -> PartitionSpec pytree for the cache
   input_specs(cell)                 -> ShapeDtypeStructs for a shape cell
@@ -43,6 +44,19 @@ _VLM_PATCHES = {"train_4k": 576, "prefill_32k": 2880, "decode_32k": 2880,
                 "long_500k": 2880}
 
 
+def fused_decode_step(decode):
+    """Build a ``decode_step`` from a ``decode``: greedy argmax over the
+    last-position logit head (``transformer._last_pos_head``), fused so a
+    jitted caller returns ``[B]`` int32 tokens and the ``[B, vocab]``
+    logit matrix never crosses the step boundary.  THE one
+    implementation — both model builders and the serving engines'
+    fallback (for harness fakes that only define ``decode``) wrap it."""
+    def decode_step(params, cache, tokens, pos, block_tables=None):
+        logits, cache = decode(params, cache, tokens, pos, block_tables)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return decode_step
+
+
 @dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ModelCfg
@@ -59,6 +73,12 @@ class Model:
     # init_paged_cache(n_blocks, block_size) -> pool; decode then takes
     # an optional block_tables=[B,NB] arg routing K/V through the pool
     init_paged_cache: Optional[Callable] = None
+    # the fused decode hot path: greedy sampling (argmax over the
+    # last-position logit head) runs INSIDE the step, so a jitted/AOT
+    # caller moves only [B] int32 tokens across the host boundary
+    # instead of [B, vocab] logits.  Same signature as ``decode`` but
+    # returns (next_tokens [B] int32, new_cache).
+    decode_step: Optional[Callable] = None
 
 
 def _frontend_width(cfg: ModelCfg, cell: ShapeCell) -> int:
@@ -155,7 +175,8 @@ def _build_lm(cfg: ModelCfg) -> Model:
 
     return Model(cfg, init, param_specs, loss, prefill, decode, init_cache,
                  cache_specs, input_specs, input_shardings,
-                 init_paged_cache=init_paged_cache)
+                 init_paged_cache=init_paged_cache,
+                 decode_step=fused_decode_step(decode))
 
 
 # ---------------------------------------------------------------------------
@@ -221,7 +242,8 @@ def _build_encdec(cfg: ModelCfg) -> Model:
                 "cache": cache_specs(batch_axes, seq_axis)}
 
     return Model(cfg, init, param_specs, loss, prefill, decode, init_cache,
-                 cache_specs, input_specs, input_shardings)
+                 cache_specs, input_specs, input_shardings,
+                 decode_step=fused_decode_step(decode))
 
 
 def count_params(cfg: ModelCfg) -> int:

@@ -25,6 +25,45 @@ with slot-granular KV memory: every admitted sequence reserves a full
   moves the allocated blocks down to the lowest ids (one gather-then-
   scatter copy) so the touched span of the pool stays dense.
 
+The fused decode hot path (``fused=True``, the default)
+-------------------------------------------------------
+Both engines rebuild their per-step traffic around one fused, donated,
+pipelined device step:
+
+* **on-device sampling** — greedy argmax runs inside the jitted step
+  (``Model.decode_step``), so ``[B]`` int32 tokens cross to host per
+  step instead of a ``[B, vocab]`` logit matrix materialized at the step
+  boundary for eager host-side sampling;
+* **donated caches** — the KV cache (slot stripes or the paged pool) is
+  donated on both the ``jax.jit`` and ``.lower().compile()`` paths, so
+  a step updates it in place instead of materializing a second cache
+  (halves peak KV memory, removes a full-cache HBM round-trip per step);
+  prefill splices and admission writes donate the same way;
+* **device-resident loop state** — tokens stay on device between steps
+  (updated by the step itself / jitted scatters on admission), and the
+  paged block tables upload once per *mutation*, not per step;
+* **one-step-ahead pipelining** — step N+1 is dispatched *before* step
+  N's tokens are synced, so host bookkeeping (retire / admit / schedule)
+  runs in the shadow of the device step.  The step additionally echoes
+  its *input* tokens (a ``[2, B]`` array: inputs + outputs), so a
+  prefill's first token reaches ``Request.tokens`` through the same
+  single per-step sync instead of its own transfer.  Retirement and
+  admission therefore lag the device by exactly one step — token
+  streams per request are unchanged (greedy decode is deterministic and
+  per-row state is independent), the retired row just rides along for
+  one masked/overwritten "shadow" step whose outputs are dropped.
+
+``fused=False`` keeps the legacy blocking path (fresh host uploads per
+step, the ``[B, vocab]`` logit output pulled through an eager argmax +
+blocking sync, undonated caches) — the baseline the
+``decode_hotpath`` campaign experiment measures against.
+
+All device->host reads go through ``_sync`` (counted in
+``EngineStats.host_syncs`` and performed with the *explicit*
+``jax.device_get``), so a test can run an engine under
+``jax.transfer_guard_device_to_host("disallow")`` and prove the fused
+path performs no stray transfers and at most one sync per step.
+
 Both engines price admission with a ``repro.core.costmodel.CostModel``
 when one is supplied, install an ``repro.core.autotune.Autotuner`` handle
 for the duration of each step, and accept an injectable ``clock`` (any
@@ -44,7 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel.model import CostModel, Prediction
-from repro.models.zoo import Model
+from repro.models.zoo import Model, fused_decode_step
 from repro.serve.paging import (BlockAllocator, blocks_for_tokens,
                                 remap_table)
 from repro.serve.scheduler import ChunkedPrefillScheduler
@@ -70,6 +109,8 @@ class EngineStats:
     #                                 are rolled back, not double-counted)
     completed: int = 0
     deferred_prefills: int = 0      # admissions pushed to a later step
+    host_syncs: int = 0             # device->host transfers (via _sync)
+    table_uploads: int = 0          # block-table host->device uploads
     predicted_step_s: List[float] = dataclasses.field(default_factory=list)
     measured_step_s: List[float] = dataclasses.field(default_factory=list)
     # paged-engine extensions (stay 0/empty on the slot engine)
@@ -96,6 +137,15 @@ def _analytic_prefill_prediction(cost_model: CostModel, cfg,
                                               n_model=1))
 
 
+def _decode_step_fn(model):
+    """``Model.decode_step`` when the model ships one, else the same
+    fusion built from ``model.decode`` (the simulation harness's fake
+    models only define ``decode``)."""
+    if getattr(model, "decode_step", None) is not None:
+        return model.decode_step
+    return fused_decode_step(model.decode)
+
+
 class _TunedDispatch:
     """Shared ``step()`` shell: install the engine's autotuner handle for
     the duration of one ``_step()`` so tuned=True kernel lookups hit this
@@ -110,6 +160,13 @@ class _TunedDispatch:
                 return self._step()
         return self._step()
 
+    def _sync(self, x) -> np.ndarray:
+        """THE device->host boundary: every value an engine reads back
+        crosses here (explicit ``jax.device_get``, counted), so the
+        transfer-guard test can disallow every other transfer."""
+        self.stats.host_syncs += 1
+        return np.asarray(jax.device_get(x))
+
 
 class ServingEngine(_TunedDispatch):
     """Slot-granular continuous batching (see module docstring)."""
@@ -118,7 +175,7 @@ class ServingEngine(_TunedDispatch):
                  max_len: int = 512,
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
-                 autotuner=None, clock=None):
+                 autotuner=None, clock=None, fused: bool = True):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -131,6 +188,7 @@ class ServingEngine(_TunedDispatch):
         # handle past the engine's own iterations
         self.autotuner = autotuner
         self._clock = clock if clock is not None else _time
+        self.fused = fused
         self.queue: deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.stats = EngineStats()
@@ -140,8 +198,33 @@ class ServingEngine(_TunedDispatch):
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)
         self.slot_tok = np.zeros(max_batch, np.int32)
-        self._decode = jax.jit(model.decode)
         self._pred_cache: Dict = {}
+        self._pending = None
+        step_fn = _decode_step_fn(model)
+        if fused:
+            # device-resident loop state: the step consumes and reproduces
+            # it, so nothing but the [2,B] token echo crosses to host
+            self._toks = jnp.zeros((max_batch,), jnp.int32)
+            self._pos = jnp.zeros((max_batch,), jnp.int32)
+
+            def fused_step(params, cache, toks, pos):
+                nxt, cache = step_fn(params, cache, toks[:, None], pos)
+                io = jnp.stack([toks, nxt])      # input echo + outputs
+                return io, nxt, pos + 1, cache
+
+            def admit_write(cache, cache1, logits, toks, pos, slot, start):
+                def splice(big, small):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        big, small.astype(big.dtype), slot, axis=1)
+                cache = jax.tree.map(splice, cache, cache1)
+                tok0 = jnp.argmax(logits[0]).astype(jnp.int32)
+                return (cache, toks.at[slot].set(tok0),
+                        pos.at[slot].set(start))
+
+            self._decode = jax.jit(fused_step, donate_argnums=(1,))
+            self._admit_fn = jax.jit(admit_write, donate_argnums=(0, 3, 4))
+        else:
+            self._decode = jax.jit(model.decode)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> int:
@@ -157,7 +240,9 @@ class ServingEngine(_TunedDispatch):
 
     def kv_cache_bytes(self) -> int:
         """Resident bytes of the decode cache (the full preallocated
-        ``max_batch x max_len`` stripe set, by construction)."""
+        ``max_batch x max_len`` stripe set, by construction).  With
+        ``fused=True`` this is also the *peak*: steps donate the cache
+        and update it in place, so no second copy ever materializes."""
         return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
 
     # -- cost-model pricing ---------------------------------------------------
@@ -165,11 +250,16 @@ class ServingEngine(_TunedDispatch):
         """Price one decode step (fixed shape: the padded max_batch).  The
         AOT executable this compiles REPLACES the jitted decode fn — jit's
         dispatch cache would not reuse it, and the decode shapes never
-        change — so pricing costs no extra compilation."""
+        change — so pricing costs no extra compilation.  Donation carries
+        through ``.lower().compile()``, so the AOT path updates the cache
+        in place exactly like the jitted one."""
         key = ("decode", self.max_batch)
         if key not in self._pred_cache:
-            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
             pos = jnp.zeros((self.max_batch,), jnp.int32)
+            if self.fused:
+                toks = jnp.zeros((self.max_batch,), jnp.int32)
+            else:
+                toks = jnp.zeros((self.max_batch, 1), jnp.int32)
             compiled = self._decode.lower(self.params, self.cache,
                                           toks, pos).compile()
             self._pred_cache[key] = self.cost_model.predict_compiled(
@@ -231,18 +321,30 @@ class ServingEngine(_TunedDispatch):
         return planned
 
     def _prefill_into_slot(self, slot: int, req: Request):
-        """Prefill a single request and splice its KV into the batch cache."""
+        """Prefill a single request and splice its KV into the batch cache.
+
+        Fused mode: the splice, the first-token argmax and the device
+        token/pos scatter run in ONE jitted call with the batch cache and
+        the loop-state arrays donated — admission is an in-place slot
+        write, not a full new cache tree, and nothing crosses to host
+        (the first token reaches ``req.tokens`` through the next step's
+        input echo)."""
         S = len(req.prompt)
         batch = {"tokens": jnp.asarray(req.prompt[None, :])}
         logits, cache1 = self.model.prefill(self.params, batch,
                                             max_len=self.max_len)
-        def splice(big, small):
-            return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
-        self.cache = jax.tree.map(splice, self.cache, cache1)
+        if self.fused:
+            self.cache, self._toks, self._pos = self._admit_fn(
+                self.cache, cache1, logits, self._toks, self._pos,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(S, jnp.int32))
+        else:
+            def splice(big, small):
+                return big.at[:, slot:slot + 1].set(small.astype(big.dtype))
+            self.cache = jax.tree.map(splice, self.cache, cache1)
+            self.slot_tok[slot] = int(self._sync(jnp.argmax(logits[0])))
+            req.tokens.append(int(self.slot_tok[slot]))
         self.slot_req[slot] = req
         self.slot_pos[slot] = S
-        self.slot_tok[slot] = int(jnp.argmax(logits[0]))
-        req.tokens.append(int(self.slot_tok[slot]))
         self.stats.prefills += 1
         self.stats.admission_order.append(req.rid)
 
@@ -253,10 +355,61 @@ class ServingEngine(_TunedDispatch):
         self.slot_req[slot] = None
         self.stats.completed += 1
 
+    def _drain(self, pending) -> None:
+        """Sync and book one in-flight step: append its tokens (plus the
+        echoed prefill token for rows on their first decode), advance the
+        host position mirror, retire.  Rows whose slot changed hands
+        since dispatch were retired in an earlier drain — their shadow
+        tokens are dropped."""
+        if pending is None:
+            return
+        io, snap = pending
+        arr = self._sync(io)                 # the ONE transfer of the step
+        in_t, out_t = arr[0], arr[1]
+        for i, req in snap:
+            if self.slot_req[i] is not req:
+                continue                     # shadow step of a retired row
+            if not req.tokens:
+                req.tokens.append(int(in_t[i]))      # prefill's first token
+            req.tokens.append(int(out_t[i]))
+            self.stats.decoded_tokens += 1
+            self.slot_pos[i] += 1
+            hit_eos = req.eos_id is not None and req.tokens[-1] == req.eos_id
+            out_of_budget = len(req.tokens) >= req.max_new_tokens
+            out_of_cache = self.slot_pos[i] >= self.max_len - 1
+            if hit_eos or out_of_budget or out_of_cache:
+                self._retire(i)
+
     def _step(self) -> int:
-        """One engine iteration: admit, decode, retire.  Returns #active.
+        """One engine iteration.  Returns #active at dispatch time.
         (``step()`` — the public entry — is the autotuner-installing shell
-        inherited from ``_TunedDispatch``.)"""
+        inherited from ``_TunedDispatch``.)
+
+        Fused: admit (host work in the shadow of the in-flight step),
+        dispatch step N, then drain step N-1 — the sync of a step's
+        tokens always happens after the NEXT step is on the device."""
+        if not self.fused:
+            return self._step_blocking()
+        t0 = self._clock.perf_counter()
+        prev, self._pending = self._pending, None
+        planned = self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if active:
+            io, nxt, pos, self.cache = self._decode(
+                self.params, self.cache, self._toks, self._pos)
+            self._toks, self._pos = nxt, pos
+            self._pending = (io, [(i, self.slot_req[i]) for i in active])
+            self.stats.steps += 1
+        self._drain(prev)
+        if active and self.cost_model is not None:
+            self.stats.predicted_step_s.append(planned)
+            self.stats.measured_step_s.append(
+                self._clock.perf_counter() - t0)
+        return len(active)
+
+    def _step_blocking(self) -> int:
+        """The legacy (unfused) iteration: fresh uploads, the [B, vocab]
+        logits synced, undonated cache — the decode_hotpath baseline."""
         t0 = self._clock.perf_counter()
         planned = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -265,7 +418,7 @@ class ServingEngine(_TunedDispatch):
         toks = jnp.asarray(self.slot_tok[:, None])
         pos = jnp.asarray(self.slot_pos)
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        nxt = self._sync(jnp.argmax(logits, axis=-1)).astype(np.int32)
         self.stats.steps += 1
         if self.cost_model is not None:
             self.stats.predicted_step_s.append(planned)
@@ -289,6 +442,9 @@ class ServingEngine(_TunedDispatch):
             active = self.step()
             if active == 0 and not self.queue:
                 break
+        if self._pending is not None:        # max_steps exhausted mid-flight
+            self._drain(self._pending)
+            self._pending = None
         return self.stats
 
 
@@ -306,7 +462,8 @@ class _Row:
     filled: int = 0                 # prompt tokens whose K/V are written
     ready: bool = False             # prefill complete; decodes each step
     pos: int = 0                    # context length == next write position
-    last_tok: int = 0
+    last_tok: int = 0               # legacy path only; fused keeps it on device
+    dispatched: int = 0             # fused: decode dispatches incl. in-flight
 
 
 class PagedServingEngine(_TunedDispatch):
@@ -325,7 +482,8 @@ class PagedServingEngine(_TunedDispatch):
                  n_blocks: Optional[int] = None, chunk_size: int = 32,
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
-                 autotuner=None, clock=None, compact_on_retire: bool = True):
+                 autotuner=None, clock=None, compact_on_retire: bool = True,
+                 fused: bool = True):
         if model.init_paged_cache is None:
             raise NotImplementedError(
                 f"{model.cfg.name}: no paged KV cache for this architecture")
@@ -338,6 +496,7 @@ class PagedServingEngine(_TunedDispatch):
         self.autotuner = autotuner
         self._clock = clock if clock is not None else _time
         self.compact_on_retire = compact_on_retire
+        self.fused = fused
 
         if block_size is None:
             block_size = 16
@@ -367,13 +526,36 @@ class PagedServingEngine(_TunedDispatch):
         self.cache = model.init_paged_cache(n_blocks, block_size)
         self.block_tables = np.full(
             (max_batch, self.max_blocks_per_seq), -1, np.int32)
+        self._bt_dev = None             # cached device copy of block_tables
         self.rows: List[Optional[_Row]] = [None] * max_batch
         self.done: Dict[int, Request] = {}
         self.stats = EngineStats()
         self._rid = itertools.count()
-        self._decode = jax.jit(model.decode)     # batch decode [B, 1]
-        self._chunk = jax.jit(model.decode)      # chunk prefill [1, C]
         self._pred_cache: Dict = {}
+        self._pending = None
+        step_fn = _decode_step_fn(model)
+        if fused:
+            self._toks = jnp.zeros((max_batch,), jnp.int32)
+
+            def fused_decode(params, cache, toks, pos, bt):
+                nxt, cache = step_fn(params, cache, toks[:, None], pos, bt)
+                io = jnp.stack([toks, nxt])
+                # masked rows (pos < 0) keep their resident token
+                return io, jnp.where(pos >= 0, nxt, toks), cache
+
+            def fused_chunk(params, cache, toks, start, bt, toks_dev, idx,
+                            final):
+                nxt, cache = step_fn(params, cache, toks, start, bt)
+                # only a prompt's FINAL chunk yields its first token;
+                # intermediate chunks leave the row's slot untouched
+                tok0 = jnp.where(final, nxt[0], toks_dev[idx])
+                return cache, toks_dev.at[idx].set(tok0)
+
+            self._decode = jax.jit(fused_decode, donate_argnums=(1,))
+            self._chunk = jax.jit(fused_chunk, donate_argnums=(1, 5))
+        else:
+            self._decode = jax.jit(model.decode)     # batch decode [B, 1]
+            self._chunk = jax.jit(model.decode)      # chunk prefill [1, C]
 
     # -- public ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
@@ -397,19 +579,24 @@ class PagedServingEngine(_TunedDispatch):
 
     def kv_cache_bytes(self) -> int:
         """Resident bytes of the paged KV store: ``n_blocks x block_size``
-        token slots regardless of ``max_batch x max_len``."""
+        token slots regardless of ``max_batch x max_len``.  Fused steps
+        donate the pool, so this is the peak too."""
         return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
 
     # -- cost-model pricing ---------------------------------------------------
     def _predict_decode(self) -> Prediction:
         """Price the paged decode step; like the slot engine, the AOT
-        executable replaces the jitted decode (shapes never change)."""
+        executable replaces the jitted decode (shapes never change) and
+        keeps the jit path's pool donation."""
         key = ("decode", self.max_batch)
         if key not in self._pred_cache:
-            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
             pos = jnp.zeros((self.max_batch,), jnp.int32)
             bt = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
                           jnp.int32)
+            if self.fused:
+                toks = jnp.zeros((self.max_batch,), jnp.int32)
+            else:
+                toks = jnp.zeros((self.max_batch, 1), jnp.int32)
             compiled = self._decode.lower(self.params, self.cache, toks,
                                           pos, bt).compile()
             self._pred_cache[key] = self.cost_model.predict_compiled(
@@ -435,12 +622,37 @@ class PagedServingEngine(_TunedDispatch):
         return self._pred_cache[key]
 
     # -- block management -----------------------------------------------------
+    def _retirement_bound(self, row: _Row) -> bool:
+        """True when the row cannot legitimately decode again — its
+        retirement is already in the pending drain, so any further
+        dispatch is a pure shadow step.  Two host-computable cases: a
+        prior dispatch reached the cache-ceiling retire point
+        (pos_after >= max_len-1; a fresh prefill AT max_len-1 still owes
+        its one decode), or every token the budget allows is already
+        dispatched (delivered length after D drained dispatches is D+1;
+        retire at >= max_new, with the legacy floor of one decode).
+        Only eos retirements, which need the synced token, are not
+        predictable here."""
+        if row.dispatched > 0 and row.pos >= self.max_len - 1:
+            return True
+        return row.dispatched >= max(row.req.max_new_tokens - 1, 1)
+
+    def _bt_device(self):
+        """The device block tables, uploaded only when a table row
+        actually mutated (growth, eviction, retire, compaction) instead
+        of fresh per step."""
+        if self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self.block_tables)
+            self.stats.table_uploads += 1
+        return self._bt_dev
+
     def _row_blocks(self, idx: int) -> List[int]:
         return [int(b) for b in self.block_tables[idx] if b >= 0]
 
     def _free_row(self, idx: int) -> None:
         self.allocator.free(self._row_blocks(idx))
         self.block_tables[idx] = -1
+        self._bt_dev = None
         self.rows[idx] = None
 
     def _placed(self) -> List[int]:
@@ -458,14 +670,18 @@ class PagedServingEngine(_TunedDispatch):
         if not cands:
             return False
         victim = max(cands, key=lambda i: self.rows[i].req.rid)
-        req = self.rows[victim].req
+        row = self.rows[victim]
+        req = row.req
         self._free_row(victim)
         # the victim replays from scratch: roll back its DELIVERED-token
         # accounting so replayed tokens are not double-counted (the
         # paged_serve throughput comparison reads decoded_tokens).
-        # prefill_chunks/preemptions stay — they record work actually done.
-        if req.tokens:
-            self.stats.decoded_tokens -= len(req.tokens) - 1
+        # prefill_chunks/preemptions stay — they record work actually
+        # done.  ``row.ready`` (not ``req.tokens``) keys the rollback:
+        # on the fused path a ready row's first token may still be in
+        # flight (the echo), leaving the list briefly empty.
+        if row.ready:
+            self.stats.decoded_tokens -= max(len(req.tokens) - 1, 0)
             self.stats.prefills -= 1
         req.tokens.clear()           # replayed from scratch on re-admission
         self.scheduler.requeue(req)
@@ -493,6 +709,7 @@ class PagedServingEngine(_TunedDispatch):
                 continue
             bt[have] = b
             have += 1
+            self._bt_dev = None      # table row mutated
         return True
 
     def _maybe_compact(self) -> None:
@@ -512,6 +729,7 @@ class PagedServingEngine(_TunedDispatch):
         for i in self._placed():
             self.block_tables[i] = remap_table(
                 list(self.block_tables[i]), src, dst)
+        self._bt_dev = None
         self.allocator.commit_compaction()
         self.stats.compactions += 1
 
@@ -534,7 +752,11 @@ class PagedServingEngine(_TunedDispatch):
         written positions (re-running the same tokens against the same
         cache rewrites identical K/V — chunked prefill is deterministic),
         and prompts shorter than one chunk are LEFT-padded with the write
-        positions pushed negative, which the paged scatter drops."""
+        positions pushed negative, which the paged scatter drops.
+
+        Fused: the pool is donated, and the final chunk's first-token
+        argmax lands in the device token array (no host transfer — the
+        value reaches ``req.tokens`` via the first decode's echo)."""
         row = self.rows[idx]
         req, C = row.req, self.chunk_size
         S = len(req.prompt)
@@ -548,25 +770,37 @@ class PagedServingEngine(_TunedDispatch):
         toks = np.zeros(C, np.int32)
         lo = max(start, 0)
         toks[C - (end - lo):] = req.prompt[lo:end]
-        bt = jnp.asarray(self.block_tables[idx:idx + 1])
-        logits, self.cache = self._chunk(
-            self.params, self.cache, jnp.asarray(toks[None]),
-            jnp.asarray([start], jnp.int32), bt)
+        bt = self._bt_device()[idx:idx + 1]
+        if self.fused:
+            self.cache, self._toks = self._chunk(
+                self.params, self.cache, jnp.asarray(toks[None]),
+                jnp.asarray([start], jnp.int32), bt, self._toks,
+                jnp.asarray(idx, jnp.int32), jnp.asarray(end == S))
+        else:
+            logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(toks[None]),
+                jnp.asarray([start], jnp.int32), bt)
         row.filled = end
         self.stats.prefill_chunks += 1
         if end == S:
             row.ready = True
             row.pos = S
-            row.last_tok = int(jnp.argmax(logits[0]))
-            req.tokens.append(row.last_tok)
             self.stats.prefills += 1
+            if not self.fused:
+                row.last_tok = int(self._sync(jnp.argmax(logits[0])))
+                req.tokens.append(row.last_tok)
 
     # -- the engine iteration -------------------------------------------------
     def _step(self) -> int:
-        """One iteration: plan, run prefill chunks, decode, retire.
-        Returns the number of placed rows.  (``step()`` is the inherited
-        autotuner-installing shell.)"""
+        """One iteration: plan, run prefill chunks, dispatch the decode,
+        then drain the PREVIOUS step (fused) — so step N's tokens are
+        synced only after step N+1 is on the device, and retire/admit/
+        schedule bookkeeping runs in the device step's shadow.  Returns
+        the number of placed rows (>= 1 while a step is still in
+        flight).  (``step()`` is the inherited autotuner-installing
+        shell.)"""
         t0 = self._clock.perf_counter()
+        prev, self._pending = self._pending, None
         unfinished = sorted(
             ((i, self.rows[i].req.rid, self.rows[i].req)
              for i in self._placed() if not self.rows[i].ready),
@@ -574,6 +808,7 @@ class PagedServingEngine(_TunedDispatch):
         n_free = self.rows.count(None)
         any_ready = any(r is not None and r.ready for r in self.rows)
         if not unfinished and not any_ready and not self.scheduler.queue:
+            self._drain(prev)        # flush the tail step, if any
             return 0
         gated = (self.cost_model is not None
                  and self.step_budget_s is not None)
@@ -600,19 +835,25 @@ class PagedServingEngine(_TunedDispatch):
 
         active = self._decode_phase()
 
-        self.stats.block_occupancy.append(self.allocator.occupancy)
         # the allocator records the exact intra-step peak (a row can grow
         # a block AND retire within one _decode_phase; sampling n_in_use
         # here would miss that high-water mark)
         self.stats.peak_blocks_in_use = self.allocator.peak_in_use
         did_work = bool(plan.items) or active
         if did_work:
+            # sampled iff the step counts, so occupancy and steps stay
+            # one-to-one (an iteration can dispatch nothing when its only
+            # ready rows are retirement-bound in the pending drain)
+            self.stats.block_occupancy.append(self.allocator.occupancy)
+        self._drain(prev)
+        if did_work:
             self.stats.steps += 1
             if self.cost_model is not None:
                 self.stats.predicted_step_s.append(plan.predicted_s)
                 self.stats.measured_step_s.append(
                     self._clock.perf_counter() - t0)
-        return len(self._placed())
+        n = len(self._placed())
+        return n if self._pending is None else max(n, 1)
 
     def _decode_phase(self) -> int:
         """Batched decode over the ready rows; rows mid-prefill (or whose
@@ -625,6 +866,15 @@ class PagedServingEngine(_TunedDispatch):
             row = self.rows[i]
             if row is None or not row.ready:
                 continue             # evicted by an earlier row's growth
+            if self.fused and self._retirement_bound(row):
+                # pipelining: the row's retirement is already determined
+                # by host-visible state (cache ceiling / token budget) and
+                # sits in the pending drain — a further shadow dispatch
+                # would only burn a step and could grow a block (even
+                # evicting a LIVE victim) for output the drain drops.
+                # Only eos retirements, which need the synced token,
+                # still cost one shadow step.
+                continue
             need = blocks_for_tokens(row.pos + 1, self.block_size)
             if self._ensure_blocks(i, need) and self.rows[i] is row:
                 stepping.append((i, row))
@@ -633,15 +883,29 @@ class PagedServingEngine(_TunedDispatch):
         stepping = [(i, row) for i, row in stepping if self.rows[i] is row]
         if not stepping:
             return 0
-        toks = np.zeros((self.max_batch, 1), np.int32)
         pos = np.full(self.max_batch, -1, np.int32)
         for i, row in stepping:
-            toks[i, 0] = row.last_tok
             pos[i] = row.pos
+        if self.fused:
+            io, self._toks, self.cache = self._decode(
+                self.params, self.cache, self._toks, jnp.asarray(pos),
+                self._bt_device())
+            # the snapshot carries each row's post-step position: that is
+            # the value retire checks compare against at drain time
+            # (row.pos itself may advance again before the drain)
+            self._pending = (io, [(i, row, row.pos + 1)
+                                  for i, row in stepping])
+            for i, row in stepping:
+                row.pos += 1
+                row.dispatched += 1
+            return len(stepping)
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i, row in stepping:
+            toks[i, 0] = row.last_tok
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(self.block_tables))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self._bt_device())
+        nxt = self._sync(jnp.argmax(logits, axis=-1)).astype(np.int32)
         for i, row in stepping:
             req = row.req
             req.tokens.append(int(nxt[i]))
@@ -654,6 +918,29 @@ class PagedServingEngine(_TunedDispatch):
             if hit_eos or out_of_budget or out_of_cache:
                 self._retire(i)
         return len(stepping)
+
+    def _drain(self, pending) -> None:
+        """Sync and book one in-flight fused step (see the slot engine's
+        ``_drain``); rows evicted or retired since dispatch are dropped
+        by identity, so replays and shadow steps never double-count."""
+        if pending is None:
+            return
+        io, snap = pending
+        arr = self._sync(io)
+        in_t, out_t = arr[0], arr[1]
+        for i, row, pos_after in snap:
+            if self.rows[i] is not row:
+                continue
+            req = row.req
+            if not req.tokens:
+                req.tokens.append(int(in_t[i]))      # echoed prefill token
+            req.tokens.append(int(out_t[i]))
+            self.stats.decoded_tokens += 1
+            hit_eos = req.eos_id is not None and req.tokens[-1] == req.eos_id
+            out_of_budget = len(req.tokens) >= req.max_new_tokens
+            out_of_cache = pos_after >= self.max_len - 1
+            if hit_eos or out_of_budget or out_of_cache:
+                self._retire(i)
 
     def _retire(self, idx: int) -> None:
         req = self.rows[idx].req
@@ -668,5 +955,8 @@ class PagedServingEngine(_TunedDispatch):
             active = self.step()
             if active == 0 and not self.scheduler.queue:
                 break
+        if self._pending is not None:        # max_steps exhausted mid-flight
+            self._drain(self._pending)
+            self._pending = None
         self.allocator.check()
         return self.stats

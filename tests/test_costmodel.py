@@ -276,3 +276,71 @@ def test_cli_export_round_trip(tmp_path, capsys):
     doc = json.loads(out_path.read_text())
     assert doc["kind"] == "costmodel_calibration"
     assert CostModel.from_named(out_path).predict(BASE_CENSUS).step_s > 0
+
+
+# ---------------------------------------------------------------------------
+# the fused-decode traffic model (costmodel.analytic)
+# ---------------------------------------------------------------------------
+
+def _decode_cell(B=8, S=512):
+    from repro.configs.base import ShapeCell
+    return ShapeCell("hotpath", "decode", S, B)
+
+
+def test_analytic_donated_decode_removes_second_cache():
+    """Donating the cache must remove (almost) a whole cache worth of
+    write traffic from the decode byte model: legacy - donated ==
+    cache_bytes - one token slice."""
+    from repro.configs import ARCHS, reduced
+    from repro.core.costmodel import analytic
+
+    cfg = reduced(ARCHS["gemma2-2b"])
+    cell = _decode_cell()
+    legacy = analytic.analytic_serve_bytes(cfg, cell, n_devices=1, n_model=1)
+    fused = analytic.analytic_serve_bytes(cfg, cell, n_devices=1, n_model=1,
+                                          donated=True)
+    saved = analytic.cache_bytes(cfg, cell) \
+        - analytic.decode_step_token_bytes(cfg, cell)
+    assert fused < legacy
+    assert abs((legacy - fused) - saved) < 1e-6 * legacy
+
+
+def test_analytic_device_sampling_shrinks_host_transfer():
+    """On-device argmax must shrink the per-step host transfer from the
+    [B, vocab] f32 logit matrix to the [2, B] int32 token echo the fused
+    engines actually sync (outputs + echoed inputs, one transfer)."""
+    from repro.configs import ARCHS, reduced
+    from repro.core.costmodel import analytic
+
+    cfg = reduced(ARCHS["gemma2-2b"])
+    cell = _decode_cell(B=4)
+    legacy = analytic.decode_boundary_bytes(cfg, cell)
+    fused = analytic.decode_boundary_bytes(cfg, cell, device_sampling=True)
+    assert legacy == 4 * cfg.vocab_size * 4.0
+    assert fused == 2 * 4 * 4.0
+
+
+def test_analytic_census_decode_flags_flow_through():
+    """The census carries both knobs: hbm_bytes drops under donation,
+    boundary_bytes drops under device sampling, and prefill cells
+    (which have no decode hot path) are unaffected."""
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ShapeCell
+    from repro.core.costmodel import analytic
+
+    cfg = reduced(ARCHS["gemma2-2b"])
+    cell = _decode_cell()
+    legacy = analytic.analytic_census(cfg, cell, n_devices=1, n_model=1)
+    fused = analytic.analytic_census(cfg, cell, n_devices=1, n_model=1,
+                                     donated=True, device_sampling=True)
+    assert fused["hbm_bytes"] < legacy["hbm_bytes"]
+    assert fused["boundary_bytes"] < legacy["boundary_bytes"]
+    # pricing through the model keeps the ordering
+    cm = CostModel.from_named("tpu_v5e")
+    assert cm.predict(fused).step_s <= cm.predict(legacy).step_s
+    pre = ShapeCell("hotpath", "prefill", 128, 1)
+    a = analytic.analytic_census(cfg, pre, n_devices=1, n_model=1)
+    b = analytic.analytic_census(cfg, pre, n_devices=1, n_model=1,
+                                 donated=True)
+    assert a["hbm_bytes"] == b["hbm_bytes"]
+    assert "boundary_bytes" not in a

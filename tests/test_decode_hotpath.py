@@ -1,0 +1,235 @@
+"""The fused decode hot path's acceptance bar.
+
+Four contracts, each pinned directly:
+
+* **token equality** — the fused path (on-device sampling, donated
+  caches, one-step-ahead pipelining) reproduces the legacy blocking
+  engines' greedy token ids byte-for-byte on the 32-request acceptance
+  trace, on BOTH engines;
+* **<= 1 host sync per step** — the transfer-counting hook
+  (``EngineStats.host_syncs``) stays at or under one device->host
+  transfer per engine step, and the whole serve loop runs under
+  ``jax.transfer_guard_device_to_host("disallow")``, so any stray
+  implicit transfer (the legacy paths' ``[B, vocab]`` logit pulls) is a
+  hard error, not a missed count;
+* **use-after-donate** — a fused step consumes its cache operand: the
+  pre-step buffers are deleted, reading them raises, and the engine
+  keeps decoding correctly on the donated successor;
+* **no second cache materialization** — across a whole serve,
+  ``kv_cache_bytes()`` is constant and the live-buffer census finds
+  exactly ONE array of the pool's shape alive (the legacy functional
+  path holds two at its peak).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models.zoo import build_model
+from repro.serve import PagedServingEngine, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _trace(cfg, n_req=32, seed=11, max_prompt=31):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(1, max_prompt))
+                         ).astype(np.int32) for _ in range(n_req)]
+
+
+def _run(eng, prompts, max_new=4):
+    rids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    eng.run_until_done(max_steps=20_000)
+    return [eng.done[r].tokens for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# token equality: fused == legacy, both engines, the acceptance trace
+# ---------------------------------------------------------------------------
+
+
+def test_fused_slot_engine_tokens_identical_on_acceptance_trace(tiny):
+    cfg, model, params = tiny
+    prompts = _trace(cfg)
+    base = _run(ServingEngine(model, params, max_batch=4, max_len=48,
+                              fused=False), prompts)
+    fused = _run(ServingEngine(model, params, max_batch=4, max_len=48,
+                               fused=True), prompts)
+    assert fused == base
+
+
+def test_fused_paged_engine_tokens_identical_on_acceptance_trace(tiny):
+    cfg, model, params = tiny
+    prompts = _trace(cfg)
+    base = _run(PagedServingEngine(model, params, max_batch=4, max_len=48,
+                                   block_size=8, n_blocks=10, chunk_size=8,
+                                   fused=False), prompts)
+    eng = PagedServingEngine(model, params, max_batch=4, max_len=48,
+                             block_size=8, n_blocks=10, chunk_size=8,
+                             fused=True)
+    fused = _run(eng, prompts)
+    assert fused == base
+    eng.allocator.check()
+    assert eng.allocator.n_free == eng.n_blocks     # still leak-free
+
+
+def test_fused_paged_engine_eos_and_eviction_paths(tiny):
+    """The lagged-retirement paths: eos mid-stream and pool-pressure
+    eviction replays must still match the legacy engine exactly."""
+    cfg, model, params = tiny
+    prompts = _trace(cfg, n_req=8, seed=5, max_prompt=28)
+    kw = dict(max_batch=4, max_len=48, block_size=8, n_blocks=6,
+              chunk_size=8)
+
+    def run(fused):
+        eng = PagedServingEngine(model, params, fused=fused, **kw)
+        rids = [eng.submit(p, max_new_tokens=5, eos_id=7) for p in prompts]
+        eng.run_until_done(max_steps=20_000)
+        return eng, [eng.done[r].tokens for r in rids]
+
+    b_eng, base = run(False)
+    f_eng, fused = run(True)
+    assert fused == base
+    assert f_eng.stats.preemptions > 0              # pool pressure exercised
+    assert f_eng.stats.completed == 8
+
+
+# ---------------------------------------------------------------------------
+# the transfer-counting hook: <= 1 device->host sync per engine step
+# ---------------------------------------------------------------------------
+
+
+def test_fused_paths_sync_at_most_once_per_step_under_transfer_guard(tiny):
+    """Counted AND enforced: ``host_syncs`` (every explicit device_get
+    the engines make) stays <= steps, while the transfer guard turns any
+    uncounted implicit device->host copy into an error."""
+    cfg, model, params = tiny
+    prompts = _trace(cfg, n_req=10, seed=3)
+    slot = ServingEngine(model, params, max_batch=4, max_len=48, fused=True)
+    paged = PagedServingEngine(model, params, max_batch=4, max_len=48,
+                               block_size=8, n_blocks=12, chunk_size=8,
+                               fused=True)
+    with jax.transfer_guard_device_to_host("disallow"):
+        for eng in (slot, paged):
+            for p in prompts:
+                eng.submit(p, max_new_tokens=4)
+            eng.run_until_done(max_steps=20_000)
+    for eng in (slot, paged):
+        assert eng.stats.completed == 10
+        assert eng.stats.steps > 0
+        assert eng.stats.host_syncs <= eng.stats.steps, (
+            eng.stats.host_syncs, eng.stats.steps)
+
+
+def test_legacy_paths_sync_more_than_once_per_step(tiny):
+    """The baseline the hook exists to expose: the blocking engines pull
+    logits every decode step AND every prefill/final-chunk, so their
+    sync rate is strictly above one per step on a trace with prefills."""
+    cfg, model, params = tiny
+    prompts = _trace(cfg, n_req=8, seed=3)
+    slot = ServingEngine(model, params, max_batch=4, max_len=48,
+                         fused=False)
+    _run(slot, prompts)
+    assert slot.stats.host_syncs > slot.stats.steps
+
+
+def test_paged_block_tables_upload_only_on_mutation(tiny):
+    """The satellite fix: the device block-table copy is cached and
+    re-uploaded only when growth/retire/eviction/compaction actually
+    mutates a table row — not rebuilt fresh every step."""
+    cfg, model, params = tiny
+    eng = PagedServingEngine(model, params, max_batch=4, max_len=64,
+                             block_size=16, n_blocks=16, chunk_size=8,
+                             fused=True)
+    prompts = _trace(cfg, n_req=4, seed=2, max_prompt=8)
+    _run(eng, prompts, max_new=24)
+    assert eng.stats.table_uploads > 0
+    # a long decode mostly runs WITHIN blocks: uploads happen on growth/
+    # retire/compaction steps only, far fewer than the step count
+    assert eng.stats.table_uploads < eng.stats.steps / 2, (
+        eng.stats.table_uploads, eng.stats.steps)
+
+
+# ---------------------------------------------------------------------------
+# donation: use-after-donate guard + no second cache materialization
+# ---------------------------------------------------------------------------
+
+
+def test_fused_step_donates_cache_and_use_after_donate_raises(tiny):
+    cfg, model, params = tiny
+    eng = ServingEngine(model, params, max_batch=2, max_len=32, fused=True)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    old = jax.tree.leaves(eng.cache)
+    eng.step()                       # prefill splice + decode, both donated
+    assert all(x.is_deleted() for x in old)
+    with pytest.raises(RuntimeError):
+        jax.device_get(old[0])
+    # and the engine still decodes correctly on the donated successor
+    eng.run_until_done()
+    assert eng.stats.completed == 1
+
+
+def test_fused_paged_step_donates_pool(tiny):
+    cfg, model, params = tiny
+    eng = PagedServingEngine(model, params, max_batch=2, max_len=32,
+                             block_size=8, chunk_size=8, fused=True)
+    eng.submit(np.arange(5, dtype=np.int32), max_new_tokens=4)
+    old = jax.tree.leaves(eng.cache)
+    eng.step()                       # the chunk call donates the pool
+    assert all(x.is_deleted() for x in old)
+    eng.run_until_done()
+    assert eng.stats.completed == 1
+
+
+def test_no_second_cache_alive_and_kv_bytes_flat(tiny):
+    """Live-buffer census: at every step boundary of a fused serve,
+    exactly one pool-shaped array is alive — the in-place successor —
+    and ``kv_cache_bytes()`` never moves.  (The legacy path necessarily
+    holds old + new caches at its peak; donation is what removes the
+    second residency.)"""
+    cfg, model, params = tiny
+    eng = PagedServingEngine(model, params, max_batch=4, max_len=48,
+                             block_size=8, n_blocks=10, chunk_size=8,
+                             fused=True)
+    pool_shape = jax.tree.leaves(eng.cache)[0].shape
+    kv0 = eng.kv_cache_bytes()
+    for p in _trace(cfg, n_req=6, seed=7):
+        eng.submit(p, max_new_tokens=4)
+    for _ in range(200):
+        active = eng.step()
+        live = [a for a in jax.live_arrays()
+                if a.shape == pool_shape and not a.is_deleted()]
+        assert len(live) == 2, len(live)     # the k pool + the v pool
+        assert eng.kv_cache_bytes() == kv0
+        if active == 0 and not eng.queue:
+            break
+    assert eng.stats.completed == 6
+
+
+# ---------------------------------------------------------------------------
+# the engine-facing decode_step head
+# ---------------------------------------------------------------------------
+
+
+def test_model_decode_step_matches_decode_argmax(tiny):
+    """``Model.decode_step`` is decode + last-pos argmax, on device."""
+    cfg, model, params = tiny
+    B, S = 2, 8
+    cache = model.init_cache(B, 16)
+    logits, cache1 = model.prefill(
+        params, {"tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S)
+                 % cfg.vocab_size}, max_len=16)
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    lg, _ = model.decode(params, cache1, toks[:, None], pos)
+    want = jnp.argmax(lg, axis=-1)
+    got, _ = model.decode_step(params, cache1, toks[:, None], pos)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

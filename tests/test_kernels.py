@@ -167,14 +167,45 @@ def _paged_case(B, H, KH, D, bs, ctxs, n_pages, seed=0):
     return q, kp, vp, jnp.asarray(bt), jnp.asarray(ctxs, jnp.int32)
 
 
+@pytest.mark.parametrize("hbm", [False, True])
 @pytest.mark.parametrize("kw", [dict(), dict(window=5), dict(softcap=8.0),
                                 dict(window=3, softcap=4.0)])
 @pytest.mark.parametrize("bs,ctxs", [(4, (1, 7, 18)), (8, (8, 3, 21))])
-def test_paged_attention_kernel_matches_ref(kw, bs, ctxs):
+def test_paged_attention_kernel_matches_ref(kw, bs, ctxs, hbm):
+    """Both lowerings — the VMEM-staged pool and the HBM-resident one
+    (pages double-buffered in via async copies) — against the oracle."""
     q, kp, vp, bt, ctx = _paged_case(3, 4, 2, 16, bs, ctxs, n_pages=16)
-    o = ops.paged_attention(q, kp, vp, bt, ctx, **kw)
+    o = ops.paged_attention(q, kp, vp, bt, ctx, hbm=hbm, **kw)
     r = ref.paged_attention_ref(q, kp, vp, bt, ctx, **kw)
     np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+
+
+def test_paged_attention_hbm_bf16_pool_and_single_page_context():
+    """The HBM lowering at the serving dtype (bf16 pool) and at the
+    single-page boundary (no double-buffer handoff at all)."""
+    q, kp, vp, bt, ctx = _paged_case(2, 4, 2, 16, 4, (3, 4), n_pages=8)
+    kp16, vp16 = kp.astype(jnp.bfloat16), vp.astype(jnp.bfloat16)
+    o = ops.paged_attention(q, kp16, vp16, bt, ctx, hbm=True)
+    r = ref.paged_attention_ref(q, kp16.astype(jnp.float32),
+                                vp16.astype(jnp.float32), bt, ctx)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-2)
+
+
+def test_paged_attention_hbm_zero_context_and_unbacked_page():
+    """HBM lowering edge cases: ctx == 0 rows are all-masked zeros, and a
+    -1 table entry inside the context masks instead of attending the
+    clipped page."""
+    q, kp, vp, bt, _ = _paged_case(2, 2, 1, 8, 4, (4, 8), n_pages=6)
+    ctx = jnp.asarray([0, 8], jnp.int32)
+    o = ops.paged_attention(q, kp, vp, bt, ctx, hbm=True)
+    r = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    assert np.abs(np.asarray(o)[0]).max() == 0.0
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+    bt2 = jnp.asarray([[-1, 2]], jnp.int32)
+    ctx2 = jnp.asarray([8], jnp.int32)
+    o2 = ops.paged_attention(q[:1], kp, vp, bt2, ctx2, hbm=True)
+    r2 = ref.paged_attention_ref(q[:1], kp, vp, bt2, ctx2)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), atol=1e-5)
 
 
 def test_paged_attention_matches_contiguous_flash_decode():

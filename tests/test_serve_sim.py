@@ -300,6 +300,51 @@ def test_block_occupancy_stats_tracked():
     assert max(eng.stats.block_occupancy) > 0
 
 
+def test_fused_path_skips_predictable_shadow_steps():
+    """Regression: a row whose retirement is already host-computable
+    (token budget exhausted by in-flight dispatches) must NOT be
+    dispatched again — a shadow step burns an iteration and can even
+    grow a block (evicting a live victim) for output the drain drops.
+    Solo 4-token prompt, one chunk, max_new=4: the chunk step also runs
+    the first decode, then two more decode steps — exactly 3 steps, no
+    trailing shadow (the unguarded pipeline dispatched a 4th)."""
+    model = FakeModel()
+    clock = SimClock()
+    eng = paged(model, clock)
+    drive(eng, clock, [(0.0, [10, 11, 12, 13], 4, None)])
+    assert eng.stats.completed == 1
+    req = next(iter(eng.done.values()))
+    assert req.tokens == expected_tokens(req.prompt, 4, 97)
+    assert eng.stats.steps == 3          # chunk+decode, decode, decode
+    assert eng.stats.decoded_tokens == 3
+
+
+def test_fused_and_blocking_paths_agree_on_scripted_trace():
+    """The fused hot path (on-device argmax, donated pool, pipelined
+    drain) against the legacy blocking path on the same scripted trace:
+    every request's tokens — computable in closed form for FakeModel —
+    must match, and only the fused engine stays at <= 1 sync/step."""
+    rng = np.random.default_rng(4)
+    arrivals = [(float(i // 2), rng.integers(0, 97, size=int(l)), 4, None)
+                for i, l in enumerate(rng.integers(1, 12, size=8))]
+
+    def run(fused):
+        model = FakeModel()
+        clock = SimClock()
+        eng = paged(model, clock, fused=fused)
+        rids = drive(eng, clock, arrivals)
+        return eng, {eng.done[r].prompt.tobytes(): eng.done[r].tokens
+                     for r in rids}
+
+    blocking_eng, blocking = run(False)
+    fused_eng, fused = run(True)
+    assert fused == blocking
+    for req in fused_eng.done.values():
+        assert req.tokens == expected_tokens(req.prompt, 4, 97)
+    assert fused_eng.stats.host_syncs <= fused_eng.stats.steps
+    assert blocking_eng.stats.host_syncs > blocking_eng.stats.steps
+
+
 # ---------------------------------------------------------------------------
 # the slot engine's corrected deferred_prefills semantics (regression)
 # ---------------------------------------------------------------------------
