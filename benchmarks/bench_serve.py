@@ -3,18 +3,28 @@
 Plays one deterministic mixed-length trace through BOTH engines (slot and
 paged), each on its legacy blocking path (``fused=False``) and on the
 fused decode hot path (on-device sampling, donated caches, pipelined
-steps), and emits a schema-versioned ``BENCH_5.json`` so the repo's
-serving-performance trajectory is recorded per change instead of living
-in commit messages:
+steps), then replays the telemetry acceptance scenarios (drift ->
+recalibration, SLO overload) on the sim harness, and emits one
+schema-versioned ``BENCH_<n>.json`` so the repo's serving-performance
+trajectory is recorded per change instead of living in commit messages:
 
-  python benchmarks/bench_serve.py --quick --out results/bench/BENCH_5.json
+  python benchmarks/bench_serve.py --quick \\
+      --out benchmarks/trajectory/BENCH_6.json
+
+``<n>`` is the PR index the snapshot was taken at; one file per PR that
+moves serving performance lands in ``benchmarks/trajectory/`` (see
+benchmarks/README.md for the convention).
 
 Fields per engine: baseline/fused tok/s + speedup, steps, host syncs per
 step, resident KV bytes, ``identical_tokens`` (greedy ids must match
 byte-for-byte — the hot path is an implementation detail, not a
 semantics change), and the cost model's predicted per-step HBM / host-
-transfer byte savings.  CI runs ``--quick`` and fails when any engine's
-``identical_tokens`` is False (rc=1).
+transfer byte savings.  The ``telemetry`` block records the drift
+scenario (events fired, error before/after the 10% gate) and the
+overload scenario (p99 vs SLO target vs the ungated baseline).  CI runs
+``--quick`` and fails (rc=1) when any engine's ``identical_tokens`` is
+False, when the drift scenario does not recalibrate back under the
+gate, or when the token bucket misses its SLO.
 """
 from __future__ import annotations
 
@@ -28,19 +38,31 @@ try:
 except ImportError:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-SCHEMA = "bench_serve/v1"
-BENCH_ID = 5          # the PR index this artifact started recording at
+SCHEMA = "bench_serve/v2"
+BENCH_ID = 6          # the PR index this snapshot records
 
 
 def run(quick: bool) -> dict:
     from repro.core.campaign.registry import run_decode_hotpath_cell
+    from repro.serve.telemetry.scenarios import (run_drift_scenario,
+                                                 run_overload_scenario)
     doc = {"schema": SCHEMA, "bench_id": BENCH_ID, "quick": bool(quick),
            "engines": {}}
     for engine in ("slot", "paged"):
         doc["engines"][engine] = run_decode_hotpath_cell(
             {"engine": engine}, quick=quick)
+    drift = run_drift_scenario()
+    drift.pop("events", None)
+    overload = run_overload_scenario()
+    doc["telemetry"] = {"drift": drift, "overload": overload}
     doc["identical_tokens"] = all(
         m["identical_tokens"] for m in doc["engines"].values())
+    doc["telemetry_ok"] = (
+        drift["n_events"] == 1
+        and drift["post_error"] is not None
+        and drift["post_error"] < drift["gate"]
+        and drift["tokens_ok"]
+        and overload["slo_held"] and overload["tokens_ok"])
     return doc
 
 
@@ -48,7 +70,8 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--quick", action="store_true",
                    help="short trace (the CI smoke mode)")
-    p.add_argument("--out", default="results/bench/BENCH_5.json",
+    p.add_argument("--out",
+                   default=f"results/bench/BENCH_{BENCH_ID}.json",
                    help="artifact path (schema-versioned JSON)")
     args = p.parse_args(argv)
 
@@ -64,8 +87,14 @@ def main(argv=None) -> int:
               f"{m['fused_syncs_per_step']:.2f}  "
               f"kv_bytes={m['fused_kv_bytes']}  "
               f"identical_tokens={m['identical_tokens']}")
+    d, o = doc["telemetry"]["drift"], doc["telemetry"]["overload"]
+    print(f"telemetry: drift events={d['n_events']} "
+          f"err {d['pre_error']:.2f} -> {d['post_error']:.3f} "
+          f"(gate {d['gate']:.2f})  "
+          f"overload p99={o['p99_s']:.2f}s target={o['target_p99_s']:.2f}s "
+          f"baseline={o['baseline_p99_s']:.2f}s deferred={o['deferred']}")
     print(f"wrote {out}")
-    return 0 if doc["identical_tokens"] else 1
+    return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -3,7 +3,10 @@ cost-model-gated admission — predicted decode-step latency decides how many
 prefills pack into each engine iteration — plus latency/throughput
 accounting per request, then the same trace through the PAGED engine
 (block-pool KV cache, chunked prefill) for a like-for-like comparison of
-tokens, KV bytes resident and preemption behaviour.
+tokens, KV bytes resident and preemption behaviour.  The paged run
+streams per-step/per-request telemetry into a MetricsSink (summary
+printed, snapshot saved under results/ — see docs/ops-runbook.md for
+how to read it).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -16,6 +19,7 @@ from repro.configs import ARCHS, reduced
 from repro.core.costmodel import CostModel
 from repro.models.zoo import build_model
 from repro.serve.engine import PagedServingEngine, ServingEngine
+from repro.serve.telemetry import TelemetryController
 
 
 def main():
@@ -55,9 +59,12 @@ def main():
     assert stats.completed == 10
 
     # the same trace, paged: a block pool sized at ~half the slot engine's
-    # max_batch x max_len rectangle, prompts prefilled in 16-token chunks
+    # max_batch x max_len rectangle, prompts prefilled in 16-token chunks;
+    # a telemetry controller streams per-step/per-request records
+    ctl = TelemetryController()
     paged = PagedServingEngine(model, params, max_batch=4, max_len=96,
-                               block_size=16, n_blocks=12, chunk_size=16)
+                               block_size=16, n_blocks=12, chunk_size=16,
+                               telemetry=ctl)
     t0 = time.time()
     prids = [paged.submit(p, max_new_tokens=12) for p in prompts]
     pstats = paged.run_until_done()
@@ -73,7 +80,13 @@ def main():
     identical = all(eng.done[a].tokens == paged.done[b].tokens
                     for a, b in zip(rids, prids))
     print(f"  greedy tokens identical: {identical}")
+    s = ctl.sink.summary()
+    snap = ctl.sink.save("results/telemetry/serve_lm_snapshot.json")
+    print(f"  telemetry: {s['steps']} steps recorded, "
+          f"step p50/p99 {s['step_p50_s']:.2e}/{s['step_p99_s']:.2e}s, "
+          f"request p99 {s['request_p99_s']:.2e}s -> {snap}")
     assert identical and pstats.completed == 10
+    assert s["steps"] == pstats.steps and s["requests"] == pstats.completed
     print("serve_lm OK")
 
 

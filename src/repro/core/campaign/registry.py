@@ -23,6 +23,9 @@ arXiv:2208.11174) onto this backend's measurement primitives:
                                decode loop: legacy blocking path vs the
                                fused one (on-device sampling, donated
                                caches, pipelined steps) on the same trace
+  * ``telemetry_replay``     - the model watched in production: the drift
+                               -> recalibration and SLO-overload scenarios
+                               replayed on the deterministic sim harness
 
 Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
 dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
@@ -350,6 +353,27 @@ def run_decode_hotpath_cell(params: Dict[str, Any], quick: bool = False
     return out
 
 
+def run_telemetry_replay_cell(params: Dict[str, Any], quick: bool = False
+                              ) -> Dict[str, Any]:
+    """Replay one telemetry acceptance scenario on the deterministic sim
+    harness (``repro.serve.sim``) and record its evidence dict: the
+    drift scenario must show exactly one recalibration restoring the
+    windowed prediction error under the 10% gate; the overload scenario
+    must show the token bucket holding the p99 SLO that an ungated run
+    of the same burst violates.  Both must keep tokens byte-identical."""
+    from repro.serve.telemetry.scenarios import (run_drift_scenario,
+                                                 run_overload_scenario)
+
+    if params["scenario"] == "drift":
+        res = run_drift_scenario(drift_factor=float(params.get("factor",
+                                                               2.0)))
+    else:
+        res = run_overload_scenario(load_factor=int(params.get("load", 2)))
+    # the per-event dicts are nested detail; the flat fields are the table
+    res.pop("events", None)
+    return res
+
+
 # ---------------------------------------------------------------------------
 # grids
 # ---------------------------------------------------------------------------
@@ -490,6 +514,18 @@ register(Experiment(
     runner=run_decode_hotpath_cell,
     cost_per_cell_s=30.0,
     tags=("serve", "hotpath", "memory"),
+))
+
+register(Experiment(
+    name="telemetry_replay",
+    description="production-telemetry scenarios on the sim harness: "
+                "injected cost-model drift -> one online recalibration "
+                "(error back under the 10% gate), and burst overload "
+                "under the SLO token bucket (p99 held, newest shed)",
+    grid={"scenario": ("drift", "overload")},
+    runner=run_telemetry_replay_cell,
+    cost_per_cell_s=20.0,
+    tags=("serve", "telemetry", "costmodel"),
 ))
 
 register(Experiment(

@@ -153,6 +153,34 @@ def decode_hotpath_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def telemetry_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Telemetry-scenario evidence from a ``telemetry_replay`` result
+    file: the drift row shows the recalibration count and the error
+    before/after (the 10% gate), the overload row shows measured p99
+    against the SLO target next to the ungated baseline's spike — plus
+    the token-equality column CI greps on both."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        if p["scenario"] == "drift":
+            derived = (f"events={m['n_events']};"
+                       f"pre_err={m['pre_error']:.3f};"
+                       f"post_err={m['post_error']:.3f};"
+                       f"gate={m['gate']:.2f};"
+                       f"identical={m['tokens_ok']};"
+                       f"completed={m['completed']}/{m['n_requests']}")
+        else:
+            derived = (f"p99_s={m['p99_s']:.2f};"
+                       f"target_s={m['target_p99_s']:.2f};"
+                       f"baseline_p99_s={m['baseline_p99_s']:.2f};"
+                       f"slo_held={m['slo_held']};"
+                       f"deferred={m['deferred']};"
+                       f"fifo={m['admission_fifo']};"
+                       f"identical={m['tokens_ok']};"
+                       f"completed={m['completed']}/{m['n_requests']}")
+        rows.append((f"telemetry/{p['scenario']}", 0.0, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -162,6 +190,7 @@ _TABLE_FOR = {
     "autotune": autotune_table,
     "paged_serve": paged_serve_table,
     "decode_hotpath": decode_hotpath_table,
+    "telemetry_replay": telemetry_table,
 }
 
 

@@ -107,6 +107,14 @@ class MXUPoint:
 
 @dataclass
 class Calibration:
+    """The normalized measured-table bundle every cost-model layer reads.
+
+    Pure data with a lossless ``to_dict``/``from_dict`` round-trip — the
+    property downstream consumers build on: tables ship as JSON, campaign
+    results convert in (``report.calibration_from_results``), and online
+    recalibration (``serve.telemetry.recalibrate.rescale_calibration``)
+    is a copy-scale-rebuild that never mutates the source instance.
+    """
     name: str
     hardware: str
     clock_hz: float

@@ -84,7 +84,15 @@ def _resolve_hw(cal: Calibration,
 
 
 class CostModel:
-    """Calibrated three-layer performance model."""
+    """Calibrated three-layer performance model.
+
+    Instruction (CPI table + issue cost), memory (bandwidth + per-level
+    latency) and MXU (per-dtype peaks + measured tile points) layers over
+    one :class:`Calibration`.  Instances are cheap, immutable-by-
+    convention views of their calibration: the serving engines swap in a
+    replacement live (``engine.set_cost_model``) when telemetry detects
+    prediction drift, rather than mutating a model in place.
+    """
 
     def __init__(self, cal: Calibration,
                  hw: Optional[HardwareSpec] = None,

@@ -1,4 +1,38 @@
-from repro.serve.engine import (EngineStats, PagedServingEngine,  # noqa
-                                Request, ServingEngine)
-from repro.serve.paging import BlockAllocator, blocks_for_tokens  # noqa
-from repro.serve.scheduler import ChunkedPrefillScheduler  # noqa
+"""The serving layer: engines, paging, scheduling, telemetry, and the
+deterministic simulation harness.
+
+Names resolve lazily (PEP 562, the ``repro.core`` idiom): the engines
+import jax eagerly, but ``repro.serve.telemetry`` (metrics schema, drift
+detector, SLO bucket) and ``repro.serve.paging`` are host-side — the
+docs CI job imports the telemetry schema without paying accelerator-
+runtime startup, and log tooling can load snapshots on machines without
+jax.
+"""
+import importlib
+
+# public name -> defining submodule
+_EXPORTS = {
+    "EngineStats": "engine",
+    "PagedServingEngine": "engine",
+    "Request": "engine",
+    "ServingEngine": "engine",
+    "BlockAllocator": "paging",
+    "blocks_for_tokens": "paging",
+    "ChunkedPrefillScheduler": "scheduler",
+}
+_SUBMODULES = ("engine", "paging", "scheduler", "sim", "telemetry")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        mod = importlib.import_module(f"repro.serve.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.serve.{name}")
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))

@@ -103,6 +103,15 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
+    """Cumulative per-engine counters, exposed as ``engine.stats``.
+
+    Field-by-field meaning (units, healthy ranges, how they differ from
+    the per-step telemetry records) is documented in
+    ``docs/ops-runbook.md``; the telemetry layer
+    (``serve.telemetry.metrics.StepRecord``) snapshots several of these
+    counters per step so consumers can diff consecutive records for
+    rates.
+    """
     steps: int = 0
     prefills: int = 0               # completed prefills (net of evictions)
     decoded_tokens: int = 0         # DELIVERED tokens (eviction replays
@@ -149,9 +158,14 @@ def _decode_step_fn(model):
 class _TunedDispatch:
     """Shared ``step()`` shell: install the engine's autotuner handle for
     the duration of one ``_step()`` so tuned=True kernel lookups hit this
-    engine's cache without leaking a process-global handle."""
+    engine's cache without leaking a process-global handle.
+
+    Also hosts the telemetry/recalibration surface both engines share:
+    ``_step_budget`` (SLO token bucket else static budget) and
+    ``set_cost_model`` (the online-recalibration swap point)."""
 
     autotuner = None
+    telemetry = None
 
     def step(self) -> int:
         if self.autotuner is not None:
@@ -167,6 +181,29 @@ class _TunedDispatch:
         self.stats.host_syncs += 1
         return np.asarray(jax.device_get(x))
 
+    def _step_budget(self) -> Optional[float]:
+        """The effective admission budget for this iteration: the SLO
+        token bucket when the telemetry controller carries one (refilled
+        here — call once per iteration), else the static
+        ``step_budget_s``.  The returned number feeds the exact same
+        gate arithmetic either way."""
+        if self.telemetry is not None:
+            budget = self.telemetry.begin_step()
+            if budget is not None:
+                return budget
+        return self.step_budget_s
+
+    def set_cost_model(self, cost_model) -> None:
+        """Swap the pricing model in place (online recalibration).
+
+        Clears the prediction cache so every later admission re-prices
+        against the new tables; the decode step itself is already an AOT
+        executable, and ``_decode_text`` (the compiled HLO captured at
+        first pricing) lets ``_predict_decode`` re-price it without
+        re-lowering."""
+        self.cost_model = cost_model
+        self._pred_cache.clear()
+
 
 class ServingEngine(_TunedDispatch):
     """Slot-granular continuous batching (see module docstring)."""
@@ -175,13 +212,17 @@ class ServingEngine(_TunedDispatch):
                  max_len: int = 512,
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
-                 autotuner=None, clock=None, fused: bool = True):
+                 autotuner=None, clock=None, fused: bool = True,
+                 telemetry=None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.cost_model = cost_model
         self.step_budget_s = step_budget_s
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind(self)
         # tuned kernel dispatch: the handle is installed for the duration
         # of each step() so the model's use_pallas hot paths (tuned=True
         # lookups) hit this engine's cache without leaking a process-global
@@ -199,6 +240,7 @@ class ServingEngine(_TunedDispatch):
         self.slot_pos = np.zeros(max_batch, np.int32)
         self.slot_tok = np.zeros(max_batch, np.int32)
         self._pred_cache: Dict = {}
+        self._decode_text: Optional[str] = None
         self._pending = None
         step_fn = _decode_step_fn(model)
         if fused:
@@ -252,19 +294,26 @@ class ServingEngine(_TunedDispatch):
         dispatch cache would not reuse it, and the decode shapes never
         change — so pricing costs no extra compilation.  Donation carries
         through ``.lower().compile()``, so the AOT path updates the cache
-        in place exactly like the jitted one."""
+        in place exactly like the jitted one.
+
+        The compiled HLO text is kept (``_decode_text``) so a
+        recalibration (``set_cost_model`` clearing ``_pred_cache``) can
+        re-price the step without re-lowering — the executable has no
+        ``.lower`` once AOT-compiled."""
         key = ("decode", self.max_batch)
         if key not in self._pred_cache:
-            pos = jnp.zeros((self.max_batch,), jnp.int32)
-            if self.fused:
-                toks = jnp.zeros((self.max_batch,), jnp.int32)
-            else:
-                toks = jnp.zeros((self.max_batch, 1), jnp.int32)
-            compiled = self._decode.lower(self.params, self.cache,
-                                          toks, pos).compile()
+            if self._decode_text is None:
+                pos = jnp.zeros((self.max_batch,), jnp.int32)
+                if self.fused:
+                    toks = jnp.zeros((self.max_batch,), jnp.int32)
+                else:
+                    toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+                compiled = self._decode.lower(self.params, self.cache,
+                                              toks, pos).compile()
+                self._decode_text = compiled.as_text()
+                self._decode = compiled
             self._pred_cache[key] = self.cost_model.predict_compiled(
-                compiled.as_text())
-            self._decode = compiled
+                self._decode_text)
         return self._pred_cache[key]
 
     def _predict_prefill(self, prompt_len: int) -> Prediction:
@@ -281,16 +330,21 @@ class ServingEngine(_TunedDispatch):
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def _admit(self) -> float:
-        """Pack queued prefills into free slots; returns the predicted time
-        of this engine iteration (0.0 when no cost model is attached).
+    def _admit(self) -> "tuple[float, int, Optional[float]]":
+        """Pack queued prefills into free slots; returns ``(planned,
+        admitted, budget)``: the predicted time of this engine iteration
+        (0.0 when no cost model is attached), the number of prefills
+        admitted, and the budget the gate used (None when ungated).
 
         With a cost model + budget, admission stops once the predicted
         iteration time (decode step + admitted prefills) would exceed the
         budget — but always admits at least one prefill when a slot is
-        free, so the engine cannot starve on an over-tight budget."""
-        gated = (self.cost_model is not None
-                 and self.step_budget_s is not None)
+        free, so the engine cannot starve on an over-tight budget.  The
+        budget is ``step_budget_s`` (static) or the SLO token bucket's
+        per-step allowance when a telemetry controller carries one
+        (``_step_budget``) — same arithmetic, adaptive number."""
+        budget = self._step_budget()
+        gated = self.cost_model is not None and budget is not None
         planned = self._predict_decode().step_s \
             if self.cost_model is not None else 0.0
         admitted = 0
@@ -302,7 +356,7 @@ class ServingEngine(_TunedDispatch):
                 pre_s = self._predict_prefill(
                     len(self.queue[0].prompt)).step_s
                 if gated and admitted > 0 \
-                        and planned + pre_s > self.step_budget_s:
+                        and planned + pre_s > budget:
                     # deferral accounting: walk the queued requests a free
                     # slot could still have taken this step and count ONLY
                     # those whose own predicted prefill would not have fit
@@ -312,13 +366,13 @@ class ServingEngine(_TunedDispatch):
                     # budget, and are not counted.
                     for q in itertools.islice(self.queue, len(free) - idx):
                         q_s = self._predict_prefill(len(q.prompt)).step_s
-                        if planned + q_s > self.step_budget_s:
+                        if planned + q_s > budget:
                             self.stats.deferred_prefills += 1
                     break
                 planned += pre_s
             self._prefill_into_slot(slot, self.queue.popleft())
             admitted += 1
-        return planned
+        return planned, admitted, budget
 
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prefill a single request and splice its KV into the batch cache.
@@ -354,6 +408,8 @@ class ServingEngine(_TunedDispatch):
         self.done[req.rid] = req
         self.slot_req[slot] = None
         self.stats.completed += 1
+        if self.telemetry is not None:
+            self.telemetry.on_retire(req)
 
     def _drain(self, pending) -> None:
         """Sync and book one in-flight step: append its tokens (plus the
@@ -380,6 +436,28 @@ class ServingEngine(_TunedDispatch):
             if hit_eos or out_of_budget or out_of_cache:
                 self._retire(i)
 
+    def _step_record(self, planned: float, measured: float, n_active: int,
+                     admitted: int, budget: Optional[float]):
+        """One telemetry ``StepRecord`` for this iteration (the slot
+        engine dispatches a decode whenever any slot is occupied, so
+        ``decode_ran`` is simply ``n_active > 0``)."""
+        from repro.serve.telemetry.metrics import StepRecord
+        pred = self._pred_cache.get(("decode", self.max_batch))
+        return StepRecord(
+            engine="slot", step=self.stats.steps, t_s=self._clock.time(),
+            n_active=n_active, queue_depth=len(self.queue),
+            predicted_s=planned,
+            predicted_decode_s=pred.step_s if pred else 0.0,
+            measured_s=measured, decode_ran=n_active > 0,
+            n_prefill_units=admitted,
+            bottleneck=getattr(pred, "bottleneck", ""),
+            budget_s=budget if budget is not None else 0.0,
+            host_syncs=self.stats.host_syncs,
+            table_uploads=self.stats.table_uploads,
+            blocks_in_use=0, n_blocks=0,
+            decoded_tokens=self.stats.decoded_tokens,
+            preemptions=0, deferred=self.stats.deferred_prefills)
+
     def _step(self) -> int:
         """One engine iteration.  Returns #active at dispatch time.
         (``step()`` — the public entry — is the autotuner-installing shell
@@ -392,7 +470,7 @@ class ServingEngine(_TunedDispatch):
             return self._step_blocking()
         t0 = self._clock.perf_counter()
         prev, self._pending = self._pending, None
-        planned = self._admit()
+        planned, admitted, budget = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if active:
             io, nxt, pos, self.cache = self._decode(
@@ -401,17 +479,20 @@ class ServingEngine(_TunedDispatch):
             self._pending = (io, [(i, self.slot_req[i]) for i in active])
             self.stats.steps += 1
         self._drain(prev)
+        measured = self._clock.perf_counter() - t0
         if active and self.cost_model is not None:
             self.stats.predicted_step_s.append(planned)
-            self.stats.measured_step_s.append(
-                self._clock.perf_counter() - t0)
+            self.stats.measured_step_s.append(measured)
+        if active and self.telemetry is not None:
+            self.telemetry.on_step(self._step_record(
+                planned, measured, len(active), admitted, budget))
         return len(active)
 
     def _step_blocking(self) -> int:
         """The legacy (unfused) iteration: fresh uploads, the [B, vocab]
         logits synced, undonated cache — the decode_hotpath baseline."""
         t0 = self._clock.perf_counter()
-        planned = self._admit()
+        planned, admitted, budget = self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return 0
@@ -420,10 +501,13 @@ class ServingEngine(_TunedDispatch):
         logits, self.cache = self._decode(self.params, self.cache, toks, pos)
         nxt = self._sync(jnp.argmax(logits, axis=-1)).astype(np.int32)
         self.stats.steps += 1
+        measured = self._clock.perf_counter() - t0
         if self.cost_model is not None:
             self.stats.predicted_step_s.append(planned)
-            self.stats.measured_step_s.append(
-                self._clock.perf_counter() - t0)
+            self.stats.measured_step_s.append(measured)
+        if self.telemetry is not None:
+            self.telemetry.on_step(self._step_record(
+                planned, measured, len(active), admitted, budget))
         for i in active:
             req = self.slot_req[i]
             req.tokens.append(int(nxt[i]))
@@ -483,7 +567,7 @@ class PagedServingEngine(_TunedDispatch):
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
                  autotuner=None, clock=None, compact_on_retire: bool = True,
-                 fused: bool = True):
+                 fused: bool = True, telemetry=None):
         if model.init_paged_cache is None:
             raise NotImplementedError(
                 f"{model.cfg.name}: no paged KV cache for this architecture")
@@ -493,6 +577,9 @@ class PagedServingEngine(_TunedDispatch):
         self.max_len = max_len
         self.cost_model = cost_model
         self.step_budget_s = step_budget_s
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind(self)
         self.autotuner = autotuner
         self._clock = clock if clock is not None else _time
         self.compact_on_retire = compact_on_retire
@@ -532,6 +619,7 @@ class PagedServingEngine(_TunedDispatch):
         self.stats = EngineStats()
         self._rid = itertools.count()
         self._pred_cache: Dict = {}
+        self._decode_text: Optional[str] = None
         self._pending = None
         step_fn = _decode_step_fn(model)
         if fused:
@@ -587,21 +675,25 @@ class PagedServingEngine(_TunedDispatch):
     def _predict_decode(self) -> Prediction:
         """Price the paged decode step; like the slot engine, the AOT
         executable replaces the jitted decode (shapes never change) and
-        keeps the jit path's pool donation."""
+        keeps the jit path's pool donation.  The compiled HLO text is
+        kept (``_decode_text``) so recalibration can re-price without
+        re-lowering (see the slot engine's ``_predict_decode``)."""
         key = ("decode", self.max_batch)
         if key not in self._pred_cache:
-            pos = jnp.zeros((self.max_batch,), jnp.int32)
-            bt = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
-                          jnp.int32)
-            if self.fused:
-                toks = jnp.zeros((self.max_batch,), jnp.int32)
-            else:
-                toks = jnp.zeros((self.max_batch, 1), jnp.int32)
-            compiled = self._decode.lower(self.params, self.cache, toks,
-                                          pos, bt).compile()
+            if self._decode_text is None:
+                pos = jnp.zeros((self.max_batch,), jnp.int32)
+                bt = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
+                              jnp.int32)
+                if self.fused:
+                    toks = jnp.zeros((self.max_batch,), jnp.int32)
+                else:
+                    toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+                compiled = self._decode.lower(self.params, self.cache, toks,
+                                              pos, bt).compile()
+                self._decode_text = compiled.as_text()
+                self._decode = compiled
             self._pred_cache[key] = self.cost_model.predict_compiled(
-                compiled.as_text())
-            self._decode = compiled
+                self._decode_text)
         return self._pred_cache[key]
 
     def _predict_chunk(self) -> Prediction:
@@ -810,15 +902,17 @@ class PagedServingEngine(_TunedDispatch):
         if not unfinished and not any_ready and not self.scheduler.queue:
             self._drain(prev)        # flush the tail step, if any
             return 0
-        gated = (self.cost_model is not None
-                 and self.step_budget_s is not None)
+        budget = self._step_budget()
+        gated = self.cost_model is not None and budget is not None
         decode_s = self._predict_decode().step_s \
             if self.cost_model is not None else 0.0
         chunk_s = self._predict_chunk().step_s \
             if self.cost_model is not None else 0.0
+        chunks_before = self.stats.prefill_chunks
         plan = self.scheduler.plan(
             unfinished=unfinished, n_free_rows=n_free, any_ready=any_ready,
-            decode_s=decode_s, chunk_s=chunk_s, gated=gated)
+            decode_s=decode_s, chunk_s=chunk_s, gated=gated,
+            budget_s=budget)
         self.stats.deferred_prefills += plan.deferred
 
         for item in plan.items:
@@ -848,12 +942,42 @@ class PagedServingEngine(_TunedDispatch):
         self._drain(prev)
         if did_work:
             self.stats.steps += 1
+            measured = self._clock.perf_counter() - t0
             if self.cost_model is not None:
                 self.stats.predicted_step_s.append(plan.predicted_s)
-                self.stats.measured_step_s.append(
-                    self._clock.perf_counter() - t0)
+                self.stats.measured_step_s.append(measured)
+            if self.telemetry is not None:
+                self.telemetry.on_step(self._step_record(
+                    plan.predicted_s, measured, active,
+                    self.stats.prefill_chunks - chunks_before, budget))
         n = len(self._placed())
         return n if self._pending is None else max(n, 1)
+
+    def _step_record(self, planned: float, measured: float,
+                     n_decoded_rows: int, n_chunks: int,
+                     budget: Optional[float]):
+        """One telemetry ``StepRecord`` for this iteration.
+        ``n_prefill_units`` counts chunks actually RUN (a planned chunk
+        can be skipped when the pool is dry), so drift attribution sees
+        the work the measured latency paid for."""
+        from repro.serve.telemetry.metrics import StepRecord
+        pred = self._pred_cache.get(("decode", self.max_batch))
+        return StepRecord(
+            engine="paged", step=self.stats.steps, t_s=self._clock.time(),
+            n_active=len(self._placed()),
+            queue_depth=len(self.scheduler.queue),
+            predicted_s=planned,
+            predicted_decode_s=pred.step_s if pred else 0.0,
+            measured_s=measured, decode_ran=n_decoded_rows > 0,
+            n_prefill_units=n_chunks,
+            bottleneck=getattr(pred, "bottleneck", ""),
+            budget_s=budget if budget is not None else 0.0,
+            host_syncs=self.stats.host_syncs,
+            table_uploads=self.stats.table_uploads,
+            blocks_in_use=self.allocator.n_in_use, n_blocks=self.n_blocks,
+            decoded_tokens=self.stats.decoded_tokens,
+            preemptions=self.stats.preemptions,
+            deferred=self.stats.deferred_prefills)
 
     def _decode_phase(self) -> int:
         """Batched decode over the ready rows; rows mid-prefill (or whose
@@ -948,6 +1072,8 @@ class PagedServingEngine(_TunedDispatch):
         self.done[req.rid] = req
         self._free_row(idx)
         self.stats.completed += 1
+        if self.telemetry is not None:
+            self.telemetry.on_retire(req)
         self._maybe_compact()
 
     def run_until_done(self, max_steps: int = 10_000) -> EngineStats:

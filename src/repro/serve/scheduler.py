@@ -88,7 +88,7 @@ class ChunkedPrefillScheduler:
     def plan(self, *, unfinished: Sequence[Tuple[int, int, object]],
              n_free_rows: int, any_ready: bool,
              decode_s: float, chunk_s: float,
-             gated: bool) -> StepPlan:
+             gated: bool, budget_s: Optional[float] = None) -> StepPlan:
         """Choose this iteration's prefill chunks.
 
         unfinished   (row, rid, request) for rows mid-prefill, FIFO order
@@ -97,7 +97,12 @@ class ChunkedPrefillScheduler:
         decode_s     predicted decode-step time (0.0 without a cost model)
         chunk_s      predicted time of one prefill chunk
         gated        True when a cost model + step budget are attached
+        budget_s     per-call budget override: the engine passes its
+                     effective budget here (the SLO token bucket's
+                     adaptive per-step allowance, ``serve.telemetry``)
+                     instead of the static ``step_budget_s``
         """
+        budget = self.step_budget_s if budget_s is None else budget_s
         cands: List[ChunkItem] = [
             ChunkItem(rid, row, req) for row, rid, req in unfinished]
         for req in list(self.queue)[:max(n_free_rows, 0)]:
@@ -107,7 +112,7 @@ class ChunkedPrefillScheduler:
         items: List[ChunkItem] = []
         deferred = 0
         for c in cands:
-            if gated and items and planned + chunk_s > self.step_budget_s:
+            if gated and items and planned + chunk_s > budget:
                 # budget gate: every remaining candidate had capacity (a
                 # row, or a free row by the queue cap above) and — chunks
                 # being uniformly priced, unlike the slot engine's

@@ -1,132 +1,24 @@
-"""Deterministic engine-simulation harness.
+"""Deterministic engine-simulation scenarios.
 
-Everything nondeterministic about serving is injected here:
-
-* **SimClock** replaces ``time.time``/``time.perf_counter`` — engines take
-  a ``clock=`` object, so timestamps advance only when the trace driver
-  says so and every submitted/finished time is an exact scripted value.
-* **FakeModel** replaces the transformer: decode is a pure-jnp arithmetic
-  rule (next token = last token + 1 mod vocab), so the *expected* output
-  of every request is computable in the test, and the shapes the engine
-  feeds the model are recorded at trace time (jit traces once per shape —
-  the recording IS the shape census).
-* **FakeCostModel** replaces calibrated pricing with constants, making
-  the scheduler's budget arithmetic — and therefore the exact
-  ``deferred_prefills`` count per step — a hand-checkable computation.
-
-Scheduler invariants pinned: no request lost, FIFO admission, exact
-deferral accounting, every evicted request eventually completes, and the
-slot engine's corrected ``deferred_prefills`` semantics (the regression
-from the old ``min(len(queue), len(free)-idx)`` over-count).
+The harness itself (SimClock / FakeModel / FakeCostModel /
+expected_tokens / drive) started life in this file and was promoted to
+``repro.serve.sim`` in the telemetry PR so the drift/overload scenarios,
+the CI smoke, and the campaign replay can share it — these tests now
+import it from there and pin the scheduler invariants on top:
+no request lost, FIFO admission, exact deferral accounting, every
+evicted request eventually completes, and the slot engine's corrected
+``deferred_prefills`` semantics (the regression from the old
+``min(len(queue), len(free)-idx)`` over-count).
 """
-import dataclasses
-from collections import deque
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.models.zoo import build_model
 from repro.serve import PagedServingEngine, ServingEngine
-
-
-# ---------------------------------------------------------------------------
-# the harness
-# ---------------------------------------------------------------------------
-
-
-class SimClock:
-    """Injected in place of the ``time`` module: advances only on demand."""
-
-    def __init__(self, t0: float = 0.0):
-        self.t = t0
-
-    def time(self) -> float:
-        return self.t
-
-    def perf_counter(self) -> float:
-        return self.t
-
-    def advance(self, dt: float) -> None:
-        self.t += dt
-
-
-@dataclasses.dataclass
-class _Pred:
-    step_s: float
-
-
-class FakeCostModel:
-    """Constant (or census-derived) prices; only ``.step_s`` is consumed."""
-
-    def __init__(self, decode_s=1.0, prefill_s=1.0, predict_fn=None):
-        self.decode_s = decode_s
-        self.prefill_s = prefill_s
-        self.predict_fn = predict_fn
-
-    def predict(self, census, **kw):
-        if self.predict_fn is not None:
-            return _Pred(self.predict_fn(census))
-        return _Pred(self.prefill_s)
-
-    def predict_compiled(self, compiled_text, **kw):
-        return _Pred(self.decode_s)
-
-
-class FakeModel:
-    """Minimal paged-decodeable model: next token = last + 1 (mod vocab).
-
-    ``decode_shapes`` records every (tokens, block_tables) shape pair the
-    engine traces — the recorded prefill/decode shape census.
-    """
-
-    def __init__(self, vocab=97, cfg=None):
-        self.vocab = vocab
-        self.cfg = cfg if cfg is not None else reduced(
-            ARCHS["gemma2-2b"], n_layers=2, vocab_size=vocab)
-        self.decode_shapes = []
-
-    def decode(self, params, cache, tokens, pos, block_tables=None):
-        self.decode_shapes.append(
-            (tuple(tokens.shape),
-             None if block_tables is None else tuple(block_tables.shape)))
-        nxt = (tokens[:, -1] + 1) % self.vocab
-        return jax.nn.one_hot(nxt, self.vocab), cache
-
-    def init_paged_cache(self, n_blocks, block_size):
-        shape = (1, n_blocks, block_size, 1, 1)
-        return {"k": jnp.zeros(shape, jnp.bfloat16),
-                "v": jnp.zeros(shape, jnp.bfloat16)}
-
-
-def expected_tokens(prompt, n, vocab, eos_id=None):
-    """What FakeModel greedily generates for ``prompt``."""
-    out, t = [], int(prompt[-1])
-    for _ in range(n):
-        t = (t + 1) % vocab
-        out.append(t)
-        if eos_id is not None and t == eos_id:
-            break
-    return out
-
-
-def drive(engine, clock, arrivals, dt=1.0, max_steps=500):
-    """Scripted-trace driver: submit each (t, prompt, max_new, eos) at its
-    arrival time, stepping the engine once per clock tick."""
-    pending = deque(sorted(arrivals, key=lambda a: a[0]))
-    rids = {}
-    for _ in range(max_steps):
-        while pending and pending[0][0] <= clock.t:
-            t, prompt, max_new, eos = pending.popleft()
-            rids[engine.submit(np.asarray(prompt, np.int32),
-                               max_new_tokens=max_new, eos_id=eos)] = t
-        active = engine.step()
-        clock.advance(dt)
-        if not pending and active == 0 and not len(engine.queue):
-            break
-    return rids
+from repro.serve.sim import (FakeCostModel, FakeModel, SimClock, drive,
+                             expected_tokens)
 
 
 def paged(model, clock=None, **kw):

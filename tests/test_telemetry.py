@@ -1,0 +1,353 @@
+"""Telemetry layer: metrics pipeline, drift -> recalibration, SLO bucket.
+
+Three tiers, cheapest first:
+
+* pure-stdlib units (sink round-trip + loud refusal, drift-detector
+  windowing, token-bucket AIMD, quantiles, schema metadata);
+* real-``CostModel`` recalibration arithmetic (no jax: the costmodel
+  layers are host-side) — pure-data ``Calibration`` rescale, tuning-
+  cache invalidation, and the controller's full calibration-path apply
+  on a stub engine;
+* the acceptance scenarios on the deterministic sim harness (jax on
+  CPU): injected drift produces EXACTLY one recalibration event with
+  post-recalibration error under the 10% gate and byte-identical
+  tokens; burst overload under the token bucket holds the p99 SLO,
+  sheds newest-first, and changes no admitted request's tokens.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.autotune.cache import TuningCache, entry_key
+from repro.core.costmodel.model import CostModel
+from repro.serve.telemetry import (SLO, DriftDetector, MetricsSink,
+                                   RequestRecord, StepRecord,
+                                   TelemetryController, TokenBucket,
+                                   invalidate_tuning_entries,
+                                   rescale_calibration, validate_snapshot)
+from repro.serve.telemetry.metrics import (REQUEST_FIELDS, STEP_FIELDS,
+                                           load_snapshot, quantile,
+                                           schema_field_names)
+
+
+def _step(i=0, **kw):
+    base = dict(engine="slot", step=i, t_s=float(i), n_active=2,
+                queue_depth=0, predicted_s=1.0, predicted_decode_s=1.0,
+                measured_s=1.0, decode_ran=True, n_prefill_units=0,
+                bottleneck="memory", budget_s=0.0, host_syncs=i,
+                table_uploads=0, blocks_in_use=0, n_blocks=0,
+                decoded_tokens=2 * i, preemptions=0, deferred=0)
+    base.update(kw)
+    return StepRecord(**base)
+
+
+# ---------------------------------------------------------------------------
+# metrics pipeline (stdlib only)
+# ---------------------------------------------------------------------------
+
+
+def test_schema_covers_every_record_field():
+    assert {f.name for f in STEP_FIELDS} == \
+        {f.name for f in dataclasses.fields(StepRecord)}
+    assert {f.name for f in REQUEST_FIELDS} == \
+        {f.name for f in dataclasses.fields(RequestRecord)}
+    for f in STEP_FIELDS + REQUEST_FIELDS:
+        assert f.unit and f.engines and f.description
+    assert "measured_s" in schema_field_names()
+
+
+def test_quantile_interpolates():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert quantile(xs, 0.0) == 1.0
+    assert quantile(xs, 1.0) == 4.0
+    assert quantile(xs, 0.5) == 2.5
+    assert quantile([], 0.99) == 0.0
+
+
+def test_sink_ring_snapshot_roundtrip_and_jsonl(tmp_path):
+    sink = MetricsSink(capacity=4)
+    for i in range(6):                  # overflow the ring
+        sink.record_step(_step(i, measured_s=1.0 + i))
+    sink.record_request(RequestRecord("slot", 0, 0.0, 3.0, 3.0, 4, 8))
+    assert sink.total_steps == 6 and len(sink.steps()) == 4
+    assert sink.steps()[0].step == 2    # oldest fell off
+
+    path = sink.save(tmp_path / "snap.json")
+    doc = load_snapshot(path)
+    assert doc["kind"] == "telemetry_snapshot"
+    assert len(doc["steps"]) == 4
+    assert doc["summary"]["steps"] == 6
+    assert doc["summary"]["request_p99_s"] == 3.0
+    # the snapshot carries its own schema table
+    assert {f["name"] for f in doc["schema"]["step"]} == \
+        {f.name for f in STEP_FIELDS}
+
+    out = sink.export_jsonl(tmp_path / "log.jsonl")
+    lines = [json.loads(line) for line in
+             out.read_text().strip().splitlines()]
+    assert [ln["record"] for ln in lines] == ["step"] * 4 + ["request"]
+
+
+def test_snapshot_loud_refusal():
+    with pytest.raises(ValueError, match="not a telemetry snapshot"):
+        validate_snapshot({"entries": {}})          # kind-less JSON
+    with pytest.raises(ValueError, match="newer than supported"):
+        validate_snapshot({"kind": "telemetry_snapshot", "version": 99})
+
+
+# ---------------------------------------------------------------------------
+# drift detector
+# ---------------------------------------------------------------------------
+
+
+def test_drift_fires_once_past_gate_then_cools_down():
+    d = DriftDetector(0.10, window=6, min_samples=4, cooldown=5)
+    events = [d.observe("decode", "b4", 1.0, 2.0) for _ in range(10)]
+    fired = [e for e in events if e is not None]
+    assert len(fired) == 1              # window reset + cooldown
+    assert events[3] is not None        # exactly at min_samples
+    ev = fired[0]
+    assert ev.kind == "decode" and ev.bucket == "b4"
+    assert ev.ratio == pytest.approx(2.0) and ev.error == pytest.approx(1.0)
+    assert d.events == fired
+
+
+def test_drift_median_resists_one_outlier_and_in_gate_is_quiet():
+    d = DriftDetector(0.10, window=8, min_samples=4)
+    for _ in range(7):
+        assert d.observe("decode", "b4", 1.0, 1.02) is None
+    # one preempted/compacted outlier step must not fake a drift
+    assert d.observe("decode", "b4", 1.0, 9.0) is None
+    assert d.error("decode", "b4") < 0.10
+
+
+def test_drift_skips_unpriceable_samples():
+    d = DriftDetector(window=4, min_samples=2)
+    for _ in range(8):
+        assert d.observe("decode", "b4", 0.0, 1.0) is None   # no model
+    assert d.error("decode", "b4") is None
+
+
+# ---------------------------------------------------------------------------
+# SLO token bucket
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_refill_burst_and_spend_floor():
+    b = TokenBucket(SLO(target_p99_s=1.0), burst_factor=2.0)
+    assert b.begin_step() == pytest.approx(2.0)     # full + refill -> burst
+    b.spend(5.0)                                    # overdraft floors at 0
+    assert b.budget_s == 0.0
+    assert b.begin_step() == pytest.approx(1.0)     # one refill
+
+
+def test_token_bucket_aimd_adapts_rate():
+    slo = SLO(target_p99_s=1.0, window=4, increase=0.1, decrease=0.5)
+    b = TokenBucket(slo)
+    for _ in range(4):
+        b.observe(2.0)                              # violated window
+    assert b.violations == 1 and b.rate_s == pytest.approx(0.5)
+    for _ in range(4):
+        b.observe(0.1)                              # healthy window
+    assert b.windows == 2 and b.rate_s == pytest.approx(0.6)
+    assert b.rate_trace == [pytest.approx(0.5), pytest.approx(0.6)]
+
+
+def test_token_bucket_rate_floor_prevents_starvation():
+    slo = SLO(target_p99_s=1.0, window=2, decrease=0.5, min_rate_s=0.25)
+    b = TokenBucket(slo)
+    for _ in range(20):
+        b.observe(9.0)
+    assert b.rate_s == pytest.approx(0.25)          # floored, not 0
+
+
+# ---------------------------------------------------------------------------
+# recalibration over the REAL cost model (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_rescale_calibration_scales_the_implicated_term():
+    model = CostModel.from_named("tpu_v5e")
+    mem_census = {"flops": 1e6, "hbm_bytes": 1e9}
+    mxu_census = {"flops": 1e15, "hbm_bytes": 1.0}
+    base_mem = model.predict(mem_census)
+    base_mxu = model.predict(mxu_census)
+    assert base_mem.bottleneck == "memory"
+    assert base_mxu.bottleneck == "compute"
+
+    slow_mem = CostModel(rescale_calibration(model.cal, 2.0,
+                                             bottleneck="memory"))
+    assert slow_mem.predict(mem_census).memory_s == \
+        pytest.approx(2.0 * base_mem.memory_s)
+    # the compute surface is untouched on the memory path
+    assert slow_mem.predict(mxu_census).compute_s == \
+        pytest.approx(base_mxu.compute_s)
+
+    slow_mxu = CostModel(rescale_calibration(model.cal, 3.0,
+                                             bottleneck="compute"))
+    assert slow_mxu.predict(mxu_census).compute_s == \
+        pytest.approx(3.0 * base_mxu.compute_s)
+
+    # pure-data update: the source calibration is never mutated
+    assert model.predict(mem_census).memory_s == \
+        pytest.approx(base_mem.memory_s)
+    assert rescale_calibration(model.cal, 2.0).name.endswith("+recal")
+    with pytest.raises(ValueError, match="positive"):
+        rescale_calibration(model.cal, 0.0)
+
+
+def test_invalidate_tuning_entries_by_calibration_id():
+    cache = TuningCache(path=None)
+    k_stale = entry_key("matmul", "m128", "bf16", "cpu", "tpu_v5e")
+    k_other = entry_key("matmul", "m128", "bf16", "cpu", "fresh")
+    cache.put(k_stale, {"config": {"bm": 128}})
+    cache.put(k_other, {"config": {"bm": 256}})
+    assert invalidate_tuning_entries(cache, calibration_id="tpu_v5e") == 1
+    assert cache.get(k_stale) is None and cache.get(k_other) is not None
+    # None = conservative drop-everything
+    assert invalidate_tuning_entries(cache, calibration_id=None) == 1
+    assert len(cache) == 0
+
+
+class _StubEngine:
+    """Just enough engine surface for the controller's calibration path."""
+    max_batch = 4
+
+    def __init__(self, cost_model, autotuner=None):
+        self.cost_model = cost_model
+        self.autotuner = autotuner
+        self._pred_cache = {"stale": object()}
+
+    def set_cost_model(self, cm):
+        self.cost_model = cm
+        self._pred_cache.clear()
+
+
+class _StubTuner:
+    def __init__(self, cost_model, cache):
+        self.cost_model = cost_model
+        self.cache = cache
+
+
+def test_controller_applies_calibration_recalibration_end_to_end():
+    """Real CostModel (no ``rescale`` protocol): a drift event must swap
+    in a rescaled calibration, clear the engine's prediction cache, drop
+    the stale tuning entries, and repoint the autotuner — all recorded
+    in the RecalibrationEvent."""
+    cm = CostModel.from_named("tpu_v5e")
+    cache = TuningCache(path=None)
+    cache.put(entry_key("paged_attention", "b4", "bf16", "cpu",
+                        cm.cal.name), {"config": {"block_size": 16}})
+    cache.put(entry_key("paged_attention", "b4", "bf16", "cpu",
+                        "unrelated"), {"config": {"block_size": 32}})
+    engine = _StubEngine(cm, _StubTuner(cm, cache))
+    ctl = TelemetryController(
+        drift=DriftDetector(0.10, window=4, min_samples=3))
+    ctl.bind(engine)
+
+    mem = {"flops": 1e6, "hbm_bytes": 1e9}
+    base = cm.predict(mem)
+    for i in range(3):
+        ctl.on_step(_step(i, predicted_decode_s=1e-3, measured_s=2e-3))
+    assert len(ctl.recalibrations) == 1
+    ev = ctl.recalibrations[0]
+    assert ev.applied == "calibration"
+    assert ev.calibration_before == "tpu_v5e"
+    assert ev.calibration_after.endswith("+recal")
+    assert ev.invalidated == 1                     # only the stale entry
+    assert cache.get(entry_key("paged_attention", "b4", "bf16", "cpu",
+                               "unrelated")) is not None
+    assert engine.cost_model is not cm             # swapped, not mutated
+    assert engine.autotuner.cost_model is engine.cost_model
+    assert engine._pred_cache == {}                # re-prices next step
+    # record said memory-bound, ratio 2: the new model predicts ~2x
+    assert engine.cost_model.predict(mem).memory_s == \
+        pytest.approx(2.0 * base.memory_s)
+    assert ctl.sink.events() == ctl.recalibrations
+
+
+def test_controller_observe_only_mode_records_but_never_applies():
+    cm = CostModel.from_named("tpu_v5e")
+    engine = _StubEngine(cm)
+    ctl = TelemetryController(
+        drift=DriftDetector(0.10, window=4, min_samples=3),
+        recalibrate=False)
+    ctl.bind(engine)
+    for i in range(3):
+        ctl.on_step(_step(i, predicted_decode_s=1e-3, measured_s=2e-3))
+    assert len(ctl.recalibrations) == 1
+    assert ctl.recalibrations[0].applied == "none"
+    assert engine.cost_model is cm
+
+
+def test_controller_rejects_double_bind_and_bad_slo():
+    ctl = TelemetryController(drift=False)
+    ctl.bind(_StubEngine(None))
+    with pytest.raises(ValueError, match="already bound"):
+        ctl.bind(_StubEngine(None))
+    with pytest.raises(TypeError, match="SLO or TokenBucket"):
+        TelemetryController(slo=3.5)
+
+
+def test_mixed_steps_never_feed_drift():
+    """A step with both decode and prefill units is attribution-
+    ambiguous and must not produce drift samples."""
+    ctl = TelemetryController(
+        drift=DriftDetector(0.10, window=4, min_samples=1))
+    ctl.bind(_StubEngine(None))
+    for i in range(8):
+        ctl.on_step(_step(i, n_prefill_units=2, decode_ran=True,
+                          predicted_decode_s=1e-3, measured_s=1.0))
+    assert ctl.recalibrations == []
+
+
+# ---------------------------------------------------------------------------
+# acceptance scenarios on the sim harness (jax, CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_drift_scenario_exactly_one_event_restores_error_and_tokens():
+    from repro.serve.telemetry.scenarios import run_drift_scenario
+    res = run_drift_scenario(drift_factor=2.0)
+    assert res["n_events"] == 1                    # exactly one, not a storm
+    assert res["pre_error"] > 0.10                 # the injected drift
+    assert res["post_error"] < 0.10                # restored under the gate
+    assert res["post_samples"] >= 4
+    assert res["rescales"] == [("decode", pytest.approx(2.0))]
+    assert res["tokens_ok"]                        # recalibration is
+    assert res["completed"] == res["n_requests"]   # invisible to outputs
+
+
+def test_overload_scenario_holds_slo_and_sheds_newest_first():
+    from repro.serve.telemetry.scenarios import run_overload_scenario
+    res = run_overload_scenario(load_factor=2)
+    assert res["slo_held"]                         # p99 <= target at 2x load
+    assert res["baseline_violates"]                # ungated would spike
+    assert res["deferred"] > 0                     # newest actually shed
+    assert res["admission_fifo"]                   # oldest protected
+    assert res["tokens_ok"]
+    assert res["completed"] == res["n_requests"]
+
+
+def test_engine_reprices_after_set_cost_model_post_compile():
+    """Regression for the Compiled-has-no-lower trap: after the first
+    ``_predict_decode`` the decode fn is an AOT executable; swapping the
+    cost model (which clears the prediction cache) must re-price from
+    the stored HLO text, not crash re-lowering — and the new price must
+    actually take effect in admission."""
+    from repro.serve.engine import PagedServingEngine
+    from repro.serve.sim import FakeCostModel, FakeModel, SimClock
+    cm = FakeCostModel(decode_s=1.0, prefill_s=1.0)
+    eng = PagedServingEngine(FakeModel(), params=None, clock=SimClock(),
+                             max_batch=2, max_len=32, block_size=4,
+                             chunk_size=4, cost_model=cm)
+    eng.submit(np.asarray([3, 4, 5], np.int32), max_new_tokens=3)
+    eng.step()
+    assert eng._predict_decode().step_s == 1.0
+    cm.rescale("decode", 2.5)
+    eng.set_cost_model(cm)
+    assert eng._predict_decode().step_s == 2.5     # re-priced, no re-lower
+    eng.run_until_done()
+    assert eng.stats.completed == 1
