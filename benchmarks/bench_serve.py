@@ -9,7 +9,7 @@ schema-versioned ``BENCH_<n>.json`` so the repo's serving-performance
 trajectory is recorded per change instead of living in commit messages:
 
   python benchmarks/bench_serve.py --quick \\
-      --out benchmarks/trajectory/BENCH_6.json
+      --out benchmarks/trajectory/BENCH_7.json
 
 ``<n>`` is the PR index the snapshot was taken at; one file per PR that
 moves serving performance lands in ``benchmarks/trajectory/`` (see
@@ -21,10 +21,16 @@ byte-for-byte — the hot path is an implementation detail, not a
 semantics change), and the cost model's predicted per-step HBM / host-
 transfer byte savings.  The ``telemetry`` block records the drift
 scenario (events fired, error before/after the 10% gate) and the
-overload scenario (p99 vs SLO target vs the ungated baseline).  CI runs
-``--quick`` and fails (rc=1) when any engine's ``identical_tokens`` is
-False, when the drift scenario does not recalibrate back under the
-gate, or when the token bucket misses its SLO.
+overload scenario (p99 vs SLO target vs the ungated baseline).  The
+``longctx`` block (schema v3) records the split-KV flash-decoding
+scenario: tuned vs unsplit lane-utilization proxy tok/s at the longest
+swept context, the tuned split factor, and token equality vs the
+oracle.  CI runs ``--quick`` and fails (rc=1) when any engine's
+``identical_tokens`` is False, when the drift scenario does not
+recalibrate back under the gate, when the token bucket misses its SLO,
+or when the tuned split stops beating the unsplit kernel
+(``longctx_ok``).  ``benchmarks/trajectory/compare.py`` then gates
+tok/s against the previous committed snapshot.
 """
 from __future__ import annotations
 
@@ -38,12 +44,13 @@ try:
 except ImportError:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-SCHEMA = "bench_serve/v2"
-BENCH_ID = 6          # the PR index this snapshot records
+SCHEMA = "bench_serve/v3"
+BENCH_ID = 7          # the PR index this snapshot records
 
 
 def run(quick: bool) -> dict:
-    from repro.core.campaign.registry import run_decode_hotpath_cell
+    from repro.core.campaign.registry import (run_decode_hotpath_cell,
+                                              run_decode_longctx_cell)
     from repro.serve.telemetry.scenarios import (run_drift_scenario,
                                                  run_overload_scenario)
     doc = {"schema": SCHEMA, "bench_id": BENCH_ID, "quick": bool(quick),
@@ -55,8 +62,17 @@ def run(quick: bool) -> dict:
     drift.pop("events", None)
     overload = run_overload_scenario()
     doc["telemetry"] = {"drift": drift, "overload": overload}
-    doc["identical_tokens"] = all(
-        m["identical_tokens"] for m in doc["engines"].values())
+    # split-KV flash-decoding at the longest swept context (v3): the
+    # cell measures its tuned pick against the unsplit kernel, so one
+    # cell carries the whole tuned-vs-unsplit scenario
+    lc = run_decode_longctx_cell(
+        {"ctx": 512 if quick else 4096, "num_splits": 4}, quick=quick)
+    doc["longctx"] = lc
+    doc["longctx_ok"] = bool(lc["identical_tokens"]
+                             and lc["tuned_speedup"] > 1.0)
+    doc["identical_tokens"] = bool(
+        all(m["identical_tokens"] for m in doc["engines"].values())
+        and lc["identical_tokens"])
     doc["telemetry_ok"] = (
         drift["n_events"] == 1
         and drift["post_error"] is not None
@@ -93,8 +109,15 @@ def main(argv=None) -> int:
           f"(gate {d['gate']:.2f})  "
           f"overload p99={o['p99_s']:.2f}s target={o['target_p99_s']:.2f}s "
           f"baseline={o['baseline_p99_s']:.2f}s deferred={o['deferred']}")
+    lc = doc["longctx"]
+    print(f"longctx: ctx={lc['ctx']} tuned_splits={lc['tuned_splits']} "
+          f"unsplit={lc['unsplit_proxy_tok_s']:.1f} tok/s "
+          f"tuned={lc['tuned_proxy_tok_s']:.1f} tok/s "
+          f"(x{lc['tuned_speedup']:.2f}) "
+          f"identical_tokens={lc['identical_tokens']}")
     print(f"wrote {out}")
-    return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]) else 1
+    return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]
+                 and doc["longctx_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,111 @@
+"""Serving-performance trajectory gate.
+
+Walks every ``BENCH_<n>.json`` in this directory in ``<n>`` order and
+compares each snapshot's throughput scenarios against the previous
+one.  A scenario regresses when its tok/s drops below ``tolerance``
+times the prior value (default 0.6 — the committed snapshots come from
+different machines and ``--quick`` runs, so only a collapse should
+fail, not jitter).  Improvements and new scenarios never fail; a
+scenario is only compared when BOTH consecutive snapshots carry it,
+which is what lets the schema grow (v2 -> v3 added ``longctx``)
+without breaking the walk.
+
+  python benchmarks/trajectory/compare.py            # gate the dir
+  python benchmarks/trajectory/compare.py --tolerance 0.5
+
+rc=0 when no scenario regressed past tolerance (or there are fewer
+than two snapshots to compare); rc=1 otherwise.  CI runs this over the
+*committed* trajectory only — the fresh snapshot a CI run produces
+lands in an artifact, not in the comparison, so cross-machine speed
+deltas cannot flake the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+_BENCH_RE = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def load_trajectory(dirpath: Path) -> list[tuple[int, dict]]:
+    """All (bench_id, document) pairs in the directory, id-ascending."""
+    out = []
+    for f in dirpath.iterdir():
+        m = _BENCH_RE.match(f.name)
+        if not m:
+            continue
+        doc = json.loads(f.read_text())
+        out.append((int(m.group(1)), doc))
+    out.sort(key=lambda p: p[0])
+    return out
+
+
+def scenarios(doc: dict) -> dict[str, float]:
+    """Flatten one snapshot into {scenario_name: tok_per_s}."""
+    s: dict[str, float] = {}
+    for engine, m in doc.get("engines", {}).items():
+        for key in ("baseline_tok_per_s", "fused_tok_per_s"):
+            if key in m:
+                s[f"{engine}.{key[:-len('_tok_per_s')]}"] = float(m[key])
+    lc = doc.get("longctx")
+    if lc:
+        ctx = lc.get("ctx", "?")
+        for key in ("unsplit_proxy_tok_s", "tuned_proxy_tok_s"):
+            if key in lc:
+                name = key[: -len("_proxy_tok_s")]
+                s[f"longctx.ctx{ctx}.{name}"] = float(lc[key])
+    return s
+
+
+def compare(trajectory: list[tuple[int, dict]],
+            tolerance: float) -> list[str]:
+    """Regression messages across every consecutive snapshot pair."""
+    failures = []
+    for (prev_id, prev_doc), (cur_id, cur_doc) in zip(trajectory,
+                                                      trajectory[1:]):
+        prev_s, cur_s = scenarios(prev_doc), scenarios(cur_doc)
+        for name in sorted(set(prev_s) & set(cur_s)):
+            before, after = prev_s[name], cur_s[name]
+            floor = tolerance * before
+            status = "ok" if after >= floor else "REGRESSED"
+            print(f"BENCH_{prev_id} -> BENCH_{cur_id}  {name}: "
+                  f"{before:.1f} -> {after:.1f} tok/s "
+                  f"(floor {floor:.1f})  {status}")
+            if after < floor:
+                failures.append(
+                    f"{name}: {after:.1f} < {floor:.1f} tok/s "
+                    f"({tolerance:.0%} of BENCH_{prev_id}'s {before:.1f})")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--dir", default=str(Path(__file__).resolve().parent),
+                   help="directory holding BENCH_<n>.json snapshots")
+    p.add_argument("--tolerance", type=float, default=0.6,
+                   help="pass while new >= tolerance * previous "
+                        "(default 0.6)")
+    args = p.parse_args(argv)
+
+    trajectory = load_trajectory(Path(args.dir))
+    if len(trajectory) < 2:
+        print(f"{len(trajectory)} snapshot(s) in {args.dir} — "
+              "nothing to compare, passing")
+        return 0
+    failures = compare(trajectory, args.tolerance)
+    if failures:
+        print(f"\n{len(failures)} scenario(s) regressed past "
+              f"tolerance {args.tolerance}:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\ntrajectory ok: {len(trajectory)} snapshots, "
+          f"no scenario below {args.tolerance:.0%} of its predecessor")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

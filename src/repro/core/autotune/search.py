@@ -319,8 +319,11 @@ def _example_call(kernel: str, shapes: Dict[str, int], dtype: str,
         v_pages = n(B * nb, bs, KH, D)
         bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
         ctx_lens = jnp.full((B,), ctx, jnp.int32)
-        return K.paged_attention, (n(B, H, D), k_pages, v_pages, bt,
-                                   ctx_lens)
+        # block_size is baked into the page layout above; num_splits is a
+        # launch parameter and must reach the dispatch wrapper to be
+        # measured
+        return (functools.partial(K.paged_attention, config=config),
+                (n(B, H, D), k_pages, v_pages, bt, ctx_lens))
     if kernel == "ssm_scan":
         B, S = shapes["batch"], shapes["seq"]
         Di, N = shapes["d_inner"], shapes["state_dim"]

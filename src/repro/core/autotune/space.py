@@ -113,6 +113,12 @@ class Tunable:
             else DEFAULT_VMEM_BYTES * VMEM_FILL
         seen, out = set(), []
         for cand in self.enumerate_fn(shapes, dtype, allow_low_precision):
+            # clamp BEFORE deduping: enumeration is shape-agnostic, so two
+            # distinct raw candidates (e.g. block_size 256 and 512 at
+            # ctx=128) can clamp to the same launched config — deduping on
+            # the raw values used to let those duplicates through
+            cand = _clamp_config(self.name, shapes,
+                                 {**self.default_config, **cand})
             key = tuple(sorted(cand.items()))
             if key in seen:
                 continue
@@ -160,6 +166,10 @@ def _clamp_config(kernel: str, shapes: Mapping[str, int],
     elif kernel == "paged_attention":
         # pages pad the context tail; any size up to the context launches
         c["block_size"] = max(min(int(c["block_size"]), shapes["ctx"]), 1)
+        # a split must cover >= 1 page (ops.paged_attention clamps to the
+        # table width, which is ceil(ctx / block_size) here)
+        nb = -(-shapes["ctx"] // c["block_size"])
+        c["num_splits"] = max(min(int(c.get("num_splits", 1)), nb), 1)
     elif kernel == "ssm_scan":
         c["block_d"] = divisor_clamp(c["block_d"], shapes["d_inner"])
     elif kernel == "wkv6":
@@ -221,45 +231,78 @@ def _fa_census(shapes, cfg, dtype):
 # from the tuning cache when it sizes its block pool)
 # ---------------------------------------------------------------------------
 
+# split-KV flash-decoding factors; pruned so every split covers >= 1 page
+_SPLIT_LADDER = (1, 2, 4, 8, 16)
+
+
 def _pa_enumerate(shapes, dtype, allow_low_precision=False):
-    return [{"block_size": bs} for bs in _blocks_upto(shapes["ctx"])]
+    out = []
+    for bs in _blocks_upto(shapes["ctx"]):
+        nb = -(-shapes["ctx"] // bs)
+        for s in _SPLIT_LADDER:
+            if s > nb:
+                continue
+            out.append({"block_size": bs, "num_splits": s})
+    return out
 
 
 def _pa_vmem(shapes, cfg, dtype):
     it = _dtype_bytes(dtype)
     D, bs = shapes["head_dim"], cfg["block_size"]
     ctx = shapes["ctx"]
+    ns = int(cfg.get("num_splits", 1))
     # the HBM-resident lowering's working set: K and V pages land in a
     # TWO-slot VMEM scratch each (double buffering — page j+1's DMA is
-    # in flight while page j is consumed), never the staged pool
+    # in flight while page j is consumed), never the staged pool.  The
+    # split form keeps the same two-slot scratch PER CELL; what grows
+    # with num_splits is the partial-row buffer the merge pass reads.
     kv = 2 * 2 * bs * D * it               # 2 K-page + 2 V-page slots
     q_o = D * (4 + it)                     # q in f32 + output row
     state = (D + 2) * 4                    # acc + (m, l), f32
     scores = bs * 4                        # s/p transient
     table = -(-ctx // bs) * 4              # the block-table row
-    return kv + q_o + state + scores + table
+    partials = (ns * (D + 2) * 4) if ns > 1 else 0  # merge working set
+    return kv + q_o + state + scores + table + partials
 
 
 def _pa_census(shapes, cfg, dtype):
-    """The block-size trade the cost model arbitrates: small pages read
-    fewer padded tail bytes (less fragmentation amplification) but pay
-    more per-page issue/gather overhead; large pages amortize issue cost
-    but round every context up to a coarser multiple."""
+    """The two trades the cost model arbitrates.  Block size: small pages
+    read fewer padded tail bytes (less fragmentation amplification) but
+    pay more per-page issue/gather overhead; large pages amortize issue
+    cost but round every context up to a coarser multiple.  Split factor:
+    more splits multiply the grid's independent cells (``grid_cells`` —
+    the utilization term ``CostModel.predict`` scales bandwidth by) at
+    the price of re-reading q per split and writing + re-reading the
+    f32 partial (m, l, acc) rows in the merge pass."""
     B, H, KH = shapes["batch"], shapes["heads"], shapes["kv_heads"]
     D, ctx, bs = shapes["head_dim"], shapes["ctx"], cfg["block_size"]
     it = _dtype_bytes(dtype)
+    ns = int(cfg.get("num_splits", 1))
     nb = -(-ctx // bs)
-    cells = B * H
+    pps = -(-nb // ns)                     # pages per split
+    cells = B * H * ns
     flops = 4.0 * B * H * ctx * D
     # K/V reads are page-granular (the padded tail is read, not the exact
-    # ctx); q/o one row per head; one table read per page
-    hbm = 2.0 * B * KH * nb * bs * D * it + 2.0 * B * H * D * it \
+    # ctx) and partitioned across splits, so total page bytes don't grow;
+    # q is re-read once per split; one table read per page
+    hbm = 2.0 * B * KH * nb * bs * D * it + (ns + 1.0) * B * H * D * it \
         + B * nb * 4.0
-    per_cell = {"dot": 2.0 * nb, "exponential": 2.0 * nb,
-                "maximum": 2.0 * nb, "multiply": 3.0 * nb,
-                "add": 2.0 * nb, "dynamic-slice": 2.0 * nb, "fusion": 1.0}
+    if ns > 1:
+        # partial (m, l, acc) rows: written by pass 1, read by the merge
+        hbm += 2.0 * B * H * ns * (D + 2) * 4.0
+    per_cell = {"dot": 2.0 * pps, "exponential": 2.0 * pps,
+                "maximum": 2.0 * pps, "multiply": 3.0 * pps,
+                "add": 2.0 * pps, "dynamic-slice": 2.0 * pps, "fusion": 1.0}
     hist = {k: v * cells for k, v in per_cell.items()}
-    return {"flops": flops, "hbm_bytes": hbm, "op_histogram": hist}
+    if ns > 1:
+        # the log-sum-exp merge pass (one fused rescale over [B,H,ns])
+        merge = B * H * ns
+        for k, v in (("exponential", 1.0), ("maximum", 1.0),
+                     ("multiply", 2.0), ("add", 2.0)):
+            hist[k] = hist.get(k, 0.0) + v * merge
+        hist["fusion"] = hist.get("fusion", 0.0) + 1.0
+    return {"flops": flops, "hbm_bytes": hbm, "op_histogram": hist,
+            "grid_cells": float(cells)}
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +423,7 @@ TUNABLES: Dict[str, Tunable] = {
             shape_keys=("batch", "heads", "kv_heads", "head_dim", "ctx"),
             default_shapes={"batch": 8, "heads": 8, "kv_heads": 2,
                             "head_dim": 128, "ctx": 2048},
-            default_config={"block_size": 16},
+            default_config={"block_size": 16, "num_splits": 1},
             enumerate_fn=_pa_enumerate,
             census_fn=_pa_census,
             vmem_fn=_pa_vmem,

@@ -153,6 +153,27 @@ def decode_hotpath_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def decode_longctx_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Split-KV flash-decoding evidence from a ``decode_longctx`` result
+    file: the lane-utilization proxy tok/s at this split factor vs the
+    unsplit kernel, the tuned pick's speedup at the same context, the
+    cost model's predicted crossover, and the token-equality column CI
+    greps in every cell."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        name = f"decode_longctx/ctx{p['ctx']}.s{p['num_splits']}"
+        derived = (f"proxy_tok_s={m['proxy_tok_s']:.1f};"
+                   f"unsplit_tok_s={m['unsplit_proxy_tok_s']:.1f};"
+                   f"speedup={m['speedup']:.2f};"
+                   f"tuned_splits={m['tuned_splits']};"
+                   f"tuned_speedup={m['tuned_speedup']:.2f};"
+                   f"pred_speedup={m['predicted_speedup']:.2f};"
+                   f"pred_best_splits={m['predicted_best_splits']};"
+                   f"identical={m['identical_tokens']}")
+        rows.append((name, float(m["wall_us"]), derived))
+    return rows
+
+
 def telemetry_table(doc: Mapping[str, Any]) -> List[Row]:
     """Telemetry-scenario evidence from a ``telemetry_replay`` result
     file: the drift row shows the recalibration count and the error
@@ -190,6 +211,7 @@ _TABLE_FOR = {
     "autotune": autotune_table,
     "paged_serve": paged_serve_table,
     "decode_hotpath": decode_hotpath_table,
+    "decode_longctx": decode_longctx_table,
     "telemetry_replay": telemetry_table,
 }
 

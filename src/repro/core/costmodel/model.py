@@ -154,6 +154,18 @@ class CostModel:
         nbytes = float(mem_bytes if mem_bytes is not None
                        else census.get("hbm_bytes", 0.0))
         memory_s = self.memory.transfer_seconds(nbytes)
+        # grid under-utilization: an analytic census may carry the launch
+        # grid's cell count ("grid_cells"); with fewer independent cells
+        # than the chip's grid lanes (hw.n_cores) the idle lanes cannot
+        # stream, so the effective bandwidth shrinks by the utilization
+        # ratio.  HLO censuses omit the key (cells = 0) and price
+        # unchanged.  This is the term that makes split-KV flash-decoding
+        # win at long context / small batch: more splits -> more cells ->
+        # higher utilization, until the partial-row traffic dominates.
+        cells = float(census.get("grid_cells", 0.0))
+        lanes = float(getattr(hw, "n_cores", 1) or 1)
+        if cells > 0.0 and cells < lanes:
+            memory_s *= lanes / cells
         coll_b = float(census.get("collective_bytes_total_tpu",
                                   census.get("collective_bytes_total", 0.0)))
         coll_bw = hw.ici_link_bandwidth * max(hw.ici_links, 1)

@@ -22,6 +22,10 @@ class HardwareSpec:
     vmem_bytes: float = 0.0         # on-chip scratch (VMEM / L2+smem)
     mxu_shape: tuple = (128, 128)   # systolic array (TPU) / TC tile (GPU)
     clock_hz: float = 0.0
+    # independent grid-execution lanes (TensorCore/SM count): a kernel
+    # whose grid has fewer cells than this cannot reach peak bandwidth —
+    # the under-utilization term split-KV decoding exists to fix
+    n_cores: int = 1
     notes: str = ""
 
 
@@ -36,6 +40,7 @@ TPU_V5E = HardwareSpec(
     vmem_bytes=128 * 2**20,
     mxu_shape=(128, 128),
     clock_hz=940e6,
+    n_cores=16,                     # modeled parallel grid lanes per chip
     notes="16GB HBM, 2D ring/torus ICI; one v5e pod = 16x16 = 256 chips",
 )
 
@@ -50,6 +55,7 @@ A100_40G = HardwareSpec(
     vmem_bytes=40 * 2**20,          # L2
     mxu_shape=(16, 8, 16),          # HMMA.16816 SASS tile (the paper, Tab.III)
     clock_hz=1410e6,
+    n_cores=108,                    # SMs (the paper, Sec. II)
     notes="the paper's device (Tesla A100); Tables II-V calibrate this spec",
 )
 

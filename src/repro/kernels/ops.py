@@ -80,22 +80,28 @@ def flash_attention(q, k, v, causal=True, window=None, softcap=None,
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
-                                             "interpret", "hbm"))
+                                             "interpret", "hbm",
+                                             "num_splits"))
 def _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale, window,
-            softcap, interpret, hbm):
+            softcap, interpret, hbm, num_splits):
     fn = _pa.paged_attention_hbm if hbm else _pa.paged_attention
     return fn(q, k_pages, v_pages, block_tables, context_lens, scale=scale,
-              window=window, softcap=softcap, interpret=interpret)
+              window=window, softcap=softcap, num_splits=num_splits,
+              interpret=interpret)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
-                    scale=None, window=None, softcap=None, interpret=None,
-                    hbm=None):
-    """Paged decode attention.  Unlike the other tunables, the tunable axis
-    (``block_size``) is a CACHE-LAYOUT parameter, fixed here by
+                    scale=None, window=None, softcap=None, num_splits=None,
+                    config=None, tuned=False, interpret=None, hbm=None):
+    """Paged decode attention.  Two tunable axes resolve differently:
+    ``block_size`` is a CACHE-LAYOUT parameter, fixed here by
     ``k_pages.shape[1]`` — the paged serving engine consults the tuning
     cache (``Autotuner.config_for('paged_attention', ...)``) when it lays
-    out the block pool, not at dispatch time.
+    out the block pool, not at dispatch time.  ``num_splits`` (the
+    split-KV flash-decoding grid axis) is a pure LAUNCH parameter and
+    resolves right here, in the standard precedence order (explicit
+    kwarg > ``config=`` > ``tuned=True`` cache hit > default), clamped
+    to the table width so every split covers >= 0 whole pages.
 
     ``hbm`` selects the HBM-resident lowering (the pool stays in ``ANY``
     memory space; pages are double-buffered into VMEM per iteration) —
@@ -106,8 +112,16 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
     interpret = _default_interpret() if interpret is None else interpret
     if hbm is None:
         hbm = jax.default_backend() == "tpu"
+    NB = block_tables.shape[1]
+    shapes = {"batch": q.shape[0], "heads": q.shape[1],
+              "kv_heads": k_pages.shape[2], "head_dim": q.shape[2],
+              "ctx": NB * k_pages.shape[1]}
+    c = resolve_kernel_config("paged_attention", shapes, q.dtype,
+                              config=config, tuned=tuned,
+                              explicit={"num_splits": num_splits})
+    splits = max(min(int(c.get("num_splits", 1)), NB), 1)
     return _pa_jit(q, k_pages, v_pages, block_tables, context_lens, scale,
-                   window, softcap, interpret, bool(hbm))
+                   window, softcap, interpret, bool(hbm), splits)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))

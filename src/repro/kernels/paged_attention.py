@@ -7,13 +7,26 @@ context occupies instead of streaming a ``max_len`` stripe per sequence —
 the block size *is* the memory-access granularity, which is what the
 paper's hierarchy tables price.
 
-Grid is ``(batch, heads)``; the GQA page panel for a query head resolves
-in the BlockSpec index_map (like ``flash_attention``), and the inner loop
-walks the sequence's valid pages with the online-softmax (m, l, acc)
-recurrence.  Page ids are data (loaded from the block-table ref), so the
-K/V loads use ``pl.ds`` dynamic slices; the loop trip count is the
-sequence's own ``ceil(ctx / block_size)``, so short contexts cost few
-iterations regardless of the table width.
+Grid is ``(batch, heads)`` — or ``(batch, heads, num_splits)`` in the
+split-KV "flash-decoding" form.  The GQA page panel for a query head
+resolves in the BlockSpec index_map (like ``flash_attention``), and the
+inner loop walks the sequence's valid pages with the online-softmax
+(m, l, acc) recurrence.  Page ids are data (loaded from the block-table
+ref), so the K/V loads use ``pl.ds`` dynamic slices; the loop trip count
+is the sequence's own ``ceil(ctx / block_size)``, so short contexts cost
+few iterations regardless of the table width.
+
+Split-KV decoding (``num_splits > 1``): one ``(b, h)`` cell otherwise
+serializes the whole context on one core while the rest of the chip
+idles — the memory-latency-hiding bound the paper measures.  The split
+form partitions a sequence's valid pages into ``num_splits`` contiguous
+slices; each slice runs the same recurrence independently over pages
+``[lo, hi)`` and emits its *partial* ``(m, l, acc)`` row, and a second
+pass merges partials with the standard log-sum-exp rescale
+(``_merge_partials``).  A split whose slice is empty (``lo >= hi`` —
+``num_splits`` exceeds the sequence's valid pages, or ``ctx == 0``)
+runs zero iterations and emits the identity partial
+``(m=NEG_INF, l=0, acc=0)``, which the merge weights to exactly zero.
 
 The pure-jnp oracle is ``repro.kernels.ref.paged_attention_ref`` (what
 CPU CI asserts against); the model-side reference path used by the paged
@@ -31,7 +44,10 @@ Two lowerings share one wrapper signature:
   scratch (page ``j+1``'s DMA is issued before page ``j`` is consumed),
   so VMEM holds exactly two K pages + two V pages + the q/acc rows —
   the pipelined working set the autotuner's ``space._pa_vmem`` prices,
-  independent of pool size.
+  independent of pool size.  The double-buffer pipeline is per-split:
+  each split's slice walks its own consecutive ``j`` range, so the
+  two-slot parity scheme works unchanged and VMEM still holds exactly
+  two K + two V pages per grid cell regardless of ``num_splits``.
 
 ``kernels.ops.paged_attention`` routes to the HBM lowering on real TPUs
 (and on request in interpret mode, which CPU CI asserts against the
@@ -49,6 +65,59 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0e38
 
 
+def _attend_page(q, k, v, raw, j, ctx, carry, *, window, softcap,
+                 block_size):
+    """One online-softmax step over page ``j`` — shared by all four
+    kernel bodies so the split and unsplit lowerings compute the same
+    math on the same page in the same order."""
+    m, l, acc = carry
+    s = q @ k.T                                           # [1, bs]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+    # in-ctx positions whose table entry is -1 (unbacked page) must
+    # mask, not attend the clipped page 0 — matches the ref oracle
+    mask = (k_pos < ctx) & (raw >= 0)                     # causal by layout
+    if window is not None:
+        mask &= (ctx - 1 - k_pos) < window
+    s = jnp.where(mask[None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[:, None] + p @ v
+    return m_new, l_new, acc_new
+
+
+def _carry_init(D):
+    return (jnp.full((1,), NEG_INF, jnp.float32),
+            jnp.zeros((1,), jnp.float32),
+            jnp.zeros((1, D), jnp.float32))
+
+
+def _split_bounds(ctx, block_size, num_splits):
+    """[lo, hi) page range of this grid cell's split — contiguous slices
+    of the sequence's valid pages; trailing splits may be empty."""
+    n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
+    pages_per_split = pl.cdiv(n_valid, num_splits)
+    lo = pl.program_id(2) * pages_per_split
+    hi = jnp.minimum(lo + pages_per_split, n_valid)
+    return lo, hi
+
+
+def _merge_partials(m, l, acc, out_dtype):
+    """Second flash-decoding pass: fold per-split partial softmax rows
+    (``m/l [B,H,S]``, ``acc [B,H,S,D]``) with the log-sum-exp rescale.
+    Identity partials (m=NEG_INF, l=0, acc=0) get weight exp(-huge)=0;
+    all-identity rows (ctx == 0) divide 0 by the 1e-30 floor and come
+    out all-zero, matching the oracle."""
+    m_star = jnp.max(m, axis=-1, keepdims=True)           # [B,H,1]
+    alpha = jnp.exp(m - m_star)                           # [B,H,S]
+    l_star = jnp.sum(l * alpha, axis=-1)                  # [B,H]
+    out = jnp.sum(acc * alpha[..., None], axis=2)         # [B,H,D]
+    return (out / jnp.maximum(l_star, 1e-30)[..., None]).astype(out_dtype)
+
+
 def _pa_kernel(q_ref, bt_ref, ctx_ref, k_ref, v_ref, o_ref, *, scale,
                window, softcap, block_size, n_pages):
     q = q_ref[0].astype(jnp.float32) * scale              # [1, D]
@@ -57,37 +126,83 @@ def _pa_kernel(q_ref, bt_ref, ctx_ref, k_ref, v_ref, o_ref, *, scale,
     n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
 
     def body(j, carry):
-        m, l, acc = carry
         raw = bt_ref[0, j]
         pid = jnp.clip(raw, 0, n_pages - 1)
         k = k_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)  # [bs, D]
         v = v_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)
-        s = q @ k.T                                       # [1, bs]
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)
-        k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
-        # in-ctx positions whose table entry is -1 (unbacked page) must
-        # mask, not attend the clipped page 0 — matches the ref oracle
-        mask = (k_pos < ctx) & (raw >= 0)                 # causal by layout
-        if window is not None:
-            mask &= (ctx - 1 - k_pos) < window
-        s = jnp.where(mask[None, :], s, NEG_INF)
-        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
-        alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=-1)
-        acc_new = acc * alpha[:, None] + p @ v
-        return m_new, l_new, acc_new
+        return _attend_page(q, k, v, raw, j, ctx, carry, window=window,
+                            softcap=softcap, block_size=block_size)
 
-    m0 = jnp.full((1,), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((1,), jnp.float32)
-    acc0 = jnp.zeros((1, D), jnp.float32)
-    _, l, acc = jax.lax.fori_loop(0, n_valid, body, (m0, l0, acc0))
+    _, l, acc = jax.lax.fori_loop(0, n_valid, body, _carry_init(D))
     o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
+def _pa_split_kernel(q_ref, bt_ref, ctx_ref, k_ref, v_ref, m_ref, l_ref,
+                     acc_ref, *, scale, window, softcap, block_size,
+                     n_pages, num_splits):
+    """First flash-decoding pass, staged-pool form: the ``(b, h, s)``
+    cell runs the recurrence over its slice of valid pages and writes
+    the partial (m, l, acc) row instead of a normalized output."""
+    q = q_ref[0].astype(jnp.float32) * scale              # [1, D]
+    D = q.shape[-1]
+    ctx = ctx_ref[0, 0]
+    lo, hi = _split_bounds(ctx, block_size, num_splits)
+
+    def body(j, carry):
+        raw = bt_ref[0, j]
+        pid = jnp.clip(raw, 0, n_pages - 1)
+        k = k_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)  # [bs, D]
+        v = v_ref[pl.ds(pid, 1)][0, :, 0].astype(jnp.float32)
+        return _attend_page(q, k, v, raw, j, ctx, carry, window=window,
+                            softcap=softcap, block_size=block_size)
+
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, _carry_init(D))
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    acc_ref[0, 0] = acc
+
+
+def _pa_specs(B, H, D, NB, P, bs, group, *, hbm, num_splits):
+    """in/out BlockSpecs + out_shape for either grid form.  The split
+    form's outputs are the f32 partial rows; the merge runs in plain
+    jnp outside the kernel (tiny: [B,H,S] rows)."""
+    if num_splits == 1:
+        q_map = lambda b, h: (b, h, 0)                     # noqa: E731
+        bt_map = lambda b, h: (b, 0)                       # noqa: E731
+        pool_map = lambda b, h, g=group: (0, 0, h // g, 0)  # noqa: E731
+        out_specs = pl.BlockSpec((1, 1, D), q_map)
+        out_shape = None                                   # caller fills
+    else:
+        q_map = lambda b, h, s: (b, h, 0)                  # noqa: E731
+        bt_map = lambda b, h, s: (b, 0)                    # noqa: E731
+        pool_map = lambda b, h, s, g=group: (0, 0, h // g, 0)  # noqa: E731
+        part_map = lambda b, h, s: (b, h, s)               # noqa: E731
+        acc_map = lambda b, h, s: (b, h, s, 0)             # noqa: E731
+        out_specs = [
+            pl.BlockSpec((1, 1, 1), part_map),
+            pl.BlockSpec((1, 1, 1), part_map),
+            pl.BlockSpec((1, 1, 1, D), acc_map),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((B, H, num_splits), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, num_splits), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, num_splits, D), jnp.float32),
+        ]
+    pool_spec = (pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+                 if hbm else pl.BlockSpec((P, bs, 1, D), pool_map))
+    in_specs = [
+        pl.BlockSpec((1, 1, D), q_map),
+        pl.BlockSpec((1, NB), bt_map),
+        pl.BlockSpec((1, 1), bt_map),
+        pool_spec,
+        pool_spec,
+    ]
+    return in_specs, out_specs, out_shape
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
-                    scale=None, window=None, softcap=None, interpret=False):
+                    scale=None, window=None, softcap=None, num_splits=1,
+                    interpret=False):
     """q [B,H,D]; k/v_pages [P,bs,KH,D]; block_tables [B,NB] int32 (-1 =
     unbacked); context_lens [B] int32 -> [B,H,D].
 
@@ -96,35 +211,47 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
     construction — only written positions are < ctx), with optional
     sliding ``window`` and logit ``softcap`` matching the flash kernel.
     Rows with ``context_lens == 0`` produce zeros (masked everywhere).
+
+    ``num_splits > 1`` selects the split-KV flash-decoding form: grid
+    ``(B, H, num_splits)``, per-split partial (m, l, acc) rows, and a
+    log-sum-exp merge pass — same outputs up to summation order.
     """
     B, H, D = q.shape
     P, bs, KH, _ = k_pages.shape
     NB = block_tables.shape[1]
     scale = scale if scale is not None else D ** -0.5
     group = H // KH
+    num_splits = max(int(num_splits), 1)
 
-    grid = (B, H)
-    out = pl.pallas_call(
-        functools.partial(_pa_kernel, scale=scale, window=window,
-                          softcap=softcap, block_size=bs, n_pages=P),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
-            pl.BlockSpec((1, NB), lambda b, h: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
-            pl.BlockSpec((P, bs, 1, D),
-                         lambda b, h, g=group: (0, 0, h // g, 0)),
-            pl.BlockSpec((P, bs, 1, D),
-                         lambda b, h, g=group: (0, 0, h // g, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+    in_specs, out_specs, out_shape = _pa_specs(
+        B, H, D, NB, P, bs, group, hbm=False, num_splits=num_splits)
+    operands = (q,
+                jnp.asarray(block_tables, jnp.int32),
+                jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
+                k_pages, v_pages)
+
+    if num_splits == 1:
+        return pl.pallas_call(
+            functools.partial(_pa_kernel, scale=scale, window=window,
+                              softcap=softcap, block_size=bs, n_pages=P),
+            grid=(B, H),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+            interpret=interpret,
+        )(*operands)
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_pa_split_kernel, scale=scale, window=window,
+                          softcap=softcap, block_size=bs, n_pages=P,
+                          num_splits=num_splits),
+        grid=(B, H, num_splits),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(q,
-      jnp.asarray(block_tables, jnp.int32),
-      jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
-      k_pages, v_pages)
-    return out
+    )(*operands)
+    return _merge_partials(m, l, acc, q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -132,19 +259,16 @@ def paged_attention(q, k_pages, v_pages, block_tables, context_lens, *,
 # ---------------------------------------------------------------------------
 
 
-def _pa_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, o_ref, *, scale,
-                   window, softcap, block_size, n_pages, group, kv_dtype):
-    """Same online-softmax recurrence as ``_pa_kernel``, but ``k_hbm`` /
-    ``v_hbm`` are unblocked ``ANY``-space refs of the WHOLE pool: each
-    iteration DMAs the table-selected page (with the GQA head collapsed
-    in the copy's source slice) into one slot of a two-slot VMEM scratch,
-    issuing page ``j+1``'s copies before waiting on page ``j`` so the
-    gather overlaps the compute."""
+def _pa_hbm_loop(q_ref, bt_ref, ctx, k_hbm, v_hbm, *, scale, window,
+                 softcap, block_size, n_pages, kh, lo, hi):
+    """The double-buffered DMA pipeline over pages ``[lo, hi)``: issue
+    page ``j+1``'s copies before waiting on page ``j`` so the gather
+    overlaps the compute.  ``j`` runs consecutively within the range,
+    so the two-slot parity scheme (``slot = j % 2``) holds for any
+    split's ``lo`` — VMEM cost is two K + two V pages regardless of
+    how many splits share the sequence.  Returns the final carry."""
     q = q_ref[0].astype(jnp.float32) * scale              # [1, D]
     D = q.shape[-1]
-    ctx = ctx_ref[0, 0]
-    n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
-    kh = pl.program_id(1) // group                        # GQA panel
 
     def body(k_buf, v_buf, k_sem, v_sem):
         def dma(buf, hbm, sem, slot, j):
@@ -152,17 +276,17 @@ def _pa_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, o_ref, *, scale,
             return pltpu.make_async_copy(hbm.at[pid, :, kh, :],
                                          buf.at[slot], sem.at[slot])
 
-        @pl.when(n_valid > 0)
+        @pl.when(hi > lo)
         def _():
-            dma(k_buf, k_hbm, k_sem, 0, 0).start()
-            dma(v_buf, v_hbm, v_sem, 0, 0).start()
+            slot0 = jax.lax.rem(lo, 2)
+            dma(k_buf, k_hbm, k_sem, slot0, lo).start()
+            dma(v_buf, v_hbm, v_sem, slot0, lo).start()
 
         def step(j, carry):
-            m, l, acc = carry
             slot = jax.lax.rem(j, 2)
             nxt = jax.lax.rem(j + 1, 2)
 
-            @pl.when(j + 1 < n_valid)
+            @pl.when(j + 1 < hi)
             def _():
                 dma(k_buf, k_hbm, k_sem, nxt, j + 1).start()
                 dma(v_buf, v_hbm, v_sem, nxt, j + 1).start()
@@ -171,66 +295,95 @@ def _pa_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, o_ref, *, scale,
             dma(v_buf, v_hbm, v_sem, slot, j).wait()
             k = k_buf[slot].astype(jnp.float32)           # [bs, D]
             v = v_buf[slot].astype(jnp.float32)
-            raw = bt_ref[0, j]
-            s = q @ k.T                                   # [1, bs]
-            if softcap is not None:
-                s = softcap * jnp.tanh(s / softcap)
-            k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
-            mask = (k_pos < ctx) & (raw >= 0)             # causal by layout
-            if window is not None:
-                mask &= (ctx - 1 - k_pos) < window
-            s = jnp.where(mask[None, :], s, NEG_INF)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[:, None])
-            alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + jnp.sum(p, axis=-1)
-            acc_new = acc * alpha[:, None] + p @ v
-            return m_new, l_new, acc_new
+            return _attend_page(q, k, v, bt_ref[0, j], j, ctx, carry,
+                                window=window, softcap=softcap,
+                                block_size=block_size)
 
-        m0 = jnp.full((1,), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((1,), jnp.float32)
-        acc0 = jnp.zeros((1, D), jnp.float32)
-        _, l, acc = jax.lax.fori_loop(0, n_valid, step, (m0, l0, acc0))
-        o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        return jax.lax.fori_loop(lo, hi, step, _carry_init(D))
 
-    pl.run_scoped(
+    return pl.run_scoped(
         body,
-        k_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), kv_dtype),
-        v_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), kv_dtype),
+        k_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), k_hbm.dtype),
+        v_buf=pltpu.VMEM((2, block_size, q_ref.shape[-1]), v_hbm.dtype),
         k_sem=pltpu.SemaphoreType.DMA((2,)),
         v_sem=pltpu.SemaphoreType.DMA((2,)))
 
 
+def _pa_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, o_ref, *, scale,
+                   window, softcap, block_size, n_pages, group):
+    """Same online-softmax recurrence as ``_pa_kernel``, but ``k_hbm`` /
+    ``v_hbm`` are unblocked ``ANY``-space refs of the WHOLE pool, walked
+    through the double-buffered DMA pipeline (``_pa_hbm_loop``)."""
+    ctx = ctx_ref[0, 0]
+    n_valid = pl.cdiv(ctx, block_size)                    # traced trip count
+    kh = pl.program_id(1) // group                        # GQA panel
+    _, l, acc = _pa_hbm_loop(q_ref, bt_ref, ctx, k_hbm, v_hbm, scale=scale,
+                             window=window, softcap=softcap,
+                             block_size=block_size, n_pages=n_pages, kh=kh,
+                             lo=jnp.int32(0), hi=n_valid)
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _pa_split_hbm_kernel(q_ref, bt_ref, ctx_ref, k_hbm, v_hbm, m_ref,
+                         l_ref, acc_ref, *, scale, window, softcap,
+                         block_size, n_pages, group, num_splits):
+    """First flash-decoding pass, HBM-resident form: the ``(b, h, s)``
+    cell pipelines only its own page slice through the two-slot VMEM
+    scratch and writes the partial (m, l, acc) row."""
+    ctx = ctx_ref[0, 0]
+    kh = pl.program_id(1) // group                        # GQA panel
+    lo, hi = _split_bounds(ctx, block_size, num_splits)
+    m, l, acc = _pa_hbm_loop(q_ref, bt_ref, ctx, k_hbm, v_hbm, scale=scale,
+                             window=window, softcap=softcap,
+                             block_size=block_size, n_pages=n_pages, kh=kh,
+                             lo=lo, hi=hi)
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+    acc_ref[0, 0] = acc
+
+
 def paged_attention_hbm(q, k_pages, v_pages, block_tables, context_lens, *,
-                        scale=None, window=None, softcap=None,
+                        scale=None, window=None, softcap=None, num_splits=1,
                         interpret=False):
     """``paged_attention`` with the page pool kept in HBM (``ANY`` memory
     space) and per-page double-buffered async copies — the production
     lowering for pools far larger than VMEM.  Same contract and oracle
-    (``ref.paged_attention_ref``) as the staged lowering."""
+    (``ref.paged_attention_ref``) as the staged lowering, including the
+    ``num_splits`` flash-decoding form."""
     B, H, D = q.shape
     P, bs, KH, _ = k_pages.shape
     NB = block_tables.shape[1]
     scale = scale if scale is not None else D ** -0.5
     group = H // KH
+    num_splits = max(int(num_splits), 1)
 
-    out = pl.pallas_call(
-        functools.partial(_pa_hbm_kernel, scale=scale, window=window,
+    in_specs, out_specs, out_shape = _pa_specs(
+        B, H, D, NB, P, bs, group, hbm=True, num_splits=num_splits)
+    operands = (q,
+                jnp.asarray(block_tables, jnp.int32),
+                jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
+                k_pages, v_pages)
+
+    if num_splits == 1:
+        return pl.pallas_call(
+            functools.partial(_pa_hbm_kernel, scale=scale, window=window,
+                              softcap=softcap, block_size=bs, n_pages=P,
+                              group=group),
+            grid=(B, H),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+            interpret=interpret,
+        )(*operands)
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_pa_split_hbm_kernel, scale=scale, window=window,
                           softcap=softcap, block_size=bs, n_pages=P,
-                          group=group, kv_dtype=k_pages.dtype),
-        grid=(B, H),
-        in_specs=[
-            pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
-            pl.BlockSpec((1, NB), lambda b, h: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        ],
-        out_specs=pl.BlockSpec((1, 1, D), lambda b, h: (b, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+                          group=group, num_splits=num_splits),
+        grid=(B, H, num_splits),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(q,
-      jnp.asarray(block_tables, jnp.int32),
-      jnp.asarray(context_lens, jnp.int32).reshape(B, 1),
-      k_pages, v_pages)
-    return out
+    )(*operands)
+    return _merge_partials(m, l, acc, q.dtype)

@@ -456,7 +456,8 @@ class ServingEngine(_TunedDispatch):
             table_uploads=self.stats.table_uploads,
             blocks_in_use=0, n_blocks=0,
             decoded_tokens=self.stats.decoded_tokens,
-            preemptions=0, deferred=self.stats.deferred_prefills)
+            preemptions=0, deferred=self.stats.deferred_prefills,
+            kernel_splits=0)
 
     def _step(self) -> int:
         """One engine iteration.  Returns #active at dispatch time.
@@ -585,15 +586,23 @@ class PagedServingEngine(_TunedDispatch):
         self.compact_on_retire = compact_on_retire
         self.fused = fused
 
+        # the tuning cache resolves both paged axes here: block_size is a
+        # cache-LAYOUT parameter (fixed at pool construction), while
+        # num_splits is a launch parameter the kernel re-resolves at
+        # dispatch (attention passes tuned=True) — kernel_splits records
+        # the resolved value for telemetry either way
+        self.kernel_splits = 1
+        tuned_cfg = None
+        if autotuner is not None:
+            cfg = model.cfg
+            shapes = {"batch": max_batch, "heads": cfg.n_heads,
+                      "kv_heads": cfg.n_kv_heads,
+                      "head_dim": cfg.head_dim, "ctx": max_len}
+            tuned_cfg = autotuner.config_for("paged_attention", shapes)
+            self.kernel_splits = int(tuned_cfg.get("num_splits", 1))
         if block_size is None:
-            block_size = 16
-            if autotuner is not None:
-                cfg = model.cfg
-                shapes = {"batch": max_batch, "heads": cfg.n_heads,
-                          "kv_heads": cfg.n_kv_heads,
-                          "head_dim": cfg.head_dim, "ctx": max_len}
-                block_size = int(autotuner.config_for(
-                    "paged_attention", shapes)["block_size"])
+            block_size = (int(tuned_cfg["block_size"])
+                          if tuned_cfg is not None else 16)
         self.block_size = block_size
         self.max_blocks_per_seq = blocks_for_tokens(max_len, block_size)
         if n_blocks is None:
@@ -977,7 +986,8 @@ class PagedServingEngine(_TunedDispatch):
             blocks_in_use=self.allocator.n_in_use, n_blocks=self.n_blocks,
             decoded_tokens=self.stats.decoded_tokens,
             preemptions=self.stats.preemptions,
-            deferred=self.stats.deferred_prefills)
+            deferred=self.stats.deferred_prefills,
+            kernel_splits=self.kernel_splits)
 
     def _decode_phase(self) -> int:
         """Batched decode over the ready rows; rows mid-prefill (or whose

@@ -82,6 +82,7 @@ class StepRecord:
     decoded_tokens: int         # cumulative delivered tokens
     preemptions: int            # cumulative evictions (paged)
     deferred: int               # cumulative budget-deferred admissions
+    kernel_splits: int          # tuned split-KV factor (paged; 0 slot)
 
 
 @dataclasses.dataclass
@@ -135,6 +136,9 @@ _STEP_META = {
     "decoded_tokens": ("tokens", "both", "cumulative delivered tokens"),
     "preemptions": ("count", "paged", "cumulative evictions"),
     "deferred": ("count", "both", "cumulative budget-deferred admissions"),
+    "kernel_splits": ("count", "paged",
+                      "resolved split-KV flash-decoding factor from the "
+                      "tuning cache (1 = unsplit; 0 on the slot engine)"),
 }
 _REQUEST_META = {
     "engine": ("-", "both", "emitting engine: 'slot' or 'paged'"),

@@ -70,6 +70,52 @@ def test_divisor_spaces_always_launchable():
         assert 12 % c["block_h"] == 0
 
 
+def test_paged_candidates_dedupe_after_clamp():
+    """Regression: at a small context the split ladder (1,2,4,8,16) and
+    large block sizes all clamp onto the same few configs — dedupe must
+    run on the CLAMPED config, not the raw ladder product, or the
+    candidate list carries duplicates that analytic search ranks (and
+    measured search times) repeatedly."""
+    tn = get_tunable("paged_attention")
+    shapes = tn.normalize_shapes({"ctx": 24})
+    cands = tn.candidates(shapes, "f32")
+    keys = [tuple(sorted(c.items())) for c in cands]
+    assert len(keys) == len(set(keys)), "clamped candidates not deduped"
+
+
+def test_paged_num_splits_never_exceeds_page_count():
+    tn = get_tunable("paged_attention")
+    shapes = tn.normalize_shapes({"ctx": 64})
+    for c in tn.candidates(shapes, "f32"):
+        n_pages = -(-64 // c["block_size"])
+        assert 1 <= c["num_splits"] <= n_pages, c
+
+
+def test_paged_ctx_buckets_tune_independently(cm):
+    """Short and long contexts land in different cache entries, so the
+    split factor tuned for ctx=4096 never leaks onto ctx=256 decodes."""
+    tuner = Autotuner(cm)
+    k_short = tuner.key_for("paged_attention", {"ctx": 256})
+    k_long = tuner.key_for("paged_attention", {"ctx": 4096})
+    assert k_short != k_long
+    assert "ctx256" in split_key(k_short)[1]
+    assert "ctx4096" in split_key(k_long)[1]
+
+
+def test_paged_split_crossover_matches_lane_model(cm):
+    """The analytic cost model must predict the split-KV crossover: a
+    lane-starved long-context decode (B*H grid cells < n_cores) tunes to
+    num_splits > 1, while the default batch-heavy shapes (cells >= lanes,
+    so splitting only adds merge traffic) stay unsplit."""
+    tuner = Autotuner(cm)
+    longctx = tuner.tune("paged_attention",
+                         {"batch": 1, "heads": 4, "kv_heads": 2,
+                          "head_dim": 128, "ctx": 4096})
+    assert longctx.best["num_splits"] > 1
+    default = tuner.tune("paged_attention")
+    assert default.best["num_splits"] == 1
+
+
 def test_unknown_shape_key_is_an_error():
     with pytest.raises(KeyError):
         get_tunable("mxu_probe").normalize_shapes({"bogus": 3})

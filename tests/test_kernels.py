@@ -236,6 +236,94 @@ def test_paged_attention_zero_context_rows_are_zero():
     np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# split-KV flash decoding: every split factor must be invisible to the caller
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hbm", [False, True])
+@pytest.mark.parametrize("kw", [dict(), dict(window=5), dict(softcap=8.0),
+                                dict(window=3, softcap=4.0)])
+@pytest.mark.parametrize("ns", [2, 3, 5])
+def test_paged_attention_split_matches_unsplit_and_ref(kw, ns, hbm):
+    """Both lowerings, ragged contexts not divisible by num_splits, GQA
+    (H=4 over KH=2): the two-pass log-sum-exp merge must reproduce the
+    unsplit kernel and the oracle."""
+    q, kp, vp, bt, ctx = _paged_case(3, 4, 2, 16, 4, (1, 7, 18), n_pages=16)
+    o_split = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=ns,
+                                  hbm=hbm, **kw)
+    o_unsplit = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=1,
+                                    hbm=hbm, **kw)
+    r = ref.paged_attention_ref(q, kp, vp, bt, ctx, **kw)
+    np.testing.assert_allclose(np.asarray(o_split), np.asarray(o_unsplit),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_split), np.asarray(r), atol=1e-5)
+
+
+@pytest.mark.parametrize("hbm", [False, True])
+def test_paged_attention_more_splits_than_pages(hbm):
+    """num_splits > n_valid_pages: surplus splits get empty [lo, hi)
+    ranges and must contribute identity partials (zero merge weight),
+    not NaNs or garbage."""
+    q, kp, vp, bt, ctx = _paged_case(2, 2, 1, 8, 4, (3, 8), n_pages=6)
+    o = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=16, hbm=hbm)
+    r = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    assert np.isfinite(np.asarray(o)).all()
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+
+
+@pytest.mark.parametrize("hbm", [False, True])
+def test_paged_attention_split_zero_ctx_and_unbacked_page(hbm):
+    """Split path edge cases: a ctx == 0 row stays all-zero after the
+    merge, and a -1 block-table entry inside the context masks its
+    positions in whichever split owns that page."""
+    q, kp, vp, bt, _ = _paged_case(2, 2, 1, 8, 4, (4, 8), n_pages=6)
+    ctx = jnp.asarray([0, 8], jnp.int32)
+    o = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=2, hbm=hbm)
+    r = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    assert np.abs(np.asarray(o)[0]).max() == 0.0
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+    bt2 = jnp.asarray([[-1, 2]], jnp.int32)
+    ctx2 = jnp.asarray([8], jnp.int32)
+    o2 = ops.paged_attention(q[:1], kp, vp, bt2, ctx2, num_splits=2, hbm=hbm)
+    r2 = ref.paged_attention_ref(q[:1], kp, vp, bt2, ctx2)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(r2), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ctx0=st.integers(0, 40), ctx1=st.integers(1, 40),
+       ns=st.integers(1, 12), bs=st.sampled_from([4, 8]),
+       window=st.sampled_from([None, 5]),
+       softcap=st.sampled_from([None, 8.0]))
+def test_paged_attention_split_equivalence_property(ctx0, ctx1, ns, bs,
+                                                    window, softcap):
+    """Property: ANY (context lengths, block size, split factor, masking
+    flags) combination — ragged contexts, splits exceeding the page
+    count, GQA heads — yields split == unsplit == ref, and identical
+    greedy argmax decisions."""
+    seed = ctx0 * 9973 + ctx1 * 389 + ns * 31 + bs
+    n_pages = -(-max(ctx0, 1) // bs) + -(-ctx1 // bs) + 2
+    q, kp, vp, bt, ctx = _paged_case(2, 4, 2, 16, bs, (ctx0, ctx1),
+                                     n_pages=n_pages, seed=seed)
+    kw = {}
+    if window is not None:
+        kw["window"] = window
+    if softcap is not None:
+        kw["softcap"] = softcap
+    o_split = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=ns, **kw)
+    o_unsplit = ops.paged_attention(q, kp, vp, bt, ctx, num_splits=1, **kw)
+    r = ref.paged_attention_ref(q, kp, vp, bt, ctx, **kw)
+    np.testing.assert_allclose(np.asarray(o_split), np.asarray(o_unsplit),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_split), np.asarray(r), atol=1e-5)
+    # the serving gate: greedy decisions downstream of the kernel must
+    # not depend on the split factor
+    rng = np.random.default_rng(seed)
+    readout = rng.normal(size=(np.asarray(q).shape[1] * 16, 64))
+    ids = lambda o: np.argmax(np.asarray(o).reshape(2, -1) @ readout, -1)  # noqa: E731
+    np.testing.assert_array_equal(ids(o_split), ids(o_unsplit))
+
+
 def test_paged_attention_unbacked_page_inside_context_is_masked():
     """Regression: a -1 block-table entry WITHIN the context range must
     mask its positions (the kernel used to clip it to page 0 and attend

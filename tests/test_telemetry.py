@@ -38,7 +38,8 @@ def _step(i=0, **kw):
                 measured_s=1.0, decode_ran=True, n_prefill_units=0,
                 bottleneck="memory", budget_s=0.0, host_syncs=i,
                 table_uploads=0, blocks_in_use=0, n_blocks=0,
-                decoded_tokens=2 * i, preemptions=0, deferred=0)
+                decoded_tokens=2 * i, preemptions=0, deferred=0,
+                kernel_splits=0)
     base.update(kw)
     return StepRecord(**base)
 
@@ -69,7 +70,7 @@ def test_quantile_interpolates():
 def test_sink_ring_snapshot_roundtrip_and_jsonl(tmp_path):
     sink = MetricsSink(capacity=4)
     for i in range(6):                  # overflow the ring
-        sink.record_step(_step(i, measured_s=1.0 + i))
+        sink.record_step(_step(i, measured_s=1.0 + i, kernel_splits=4))
     sink.record_request(RequestRecord("slot", 0, 0.0, 3.0, 3.0, 4, 8))
     assert sink.total_steps == 6 and len(sink.steps()) == 4
     assert sink.steps()[0].step == 2    # oldest fell off
@@ -78,6 +79,8 @@ def test_sink_ring_snapshot_roundtrip_and_jsonl(tmp_path):
     doc = load_snapshot(path)
     assert doc["kind"] == "telemetry_snapshot"
     assert len(doc["steps"]) == 4
+    # the resolved split-KV factor survives the snapshot round-trip
+    assert all(s["kernel_splits"] == 4 for s in doc["steps"])
     assert doc["summary"]["steps"] == 6
     assert doc["summary"]["request_p99_s"] == 3.0
     # the snapshot carries its own schema table
