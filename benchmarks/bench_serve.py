@@ -25,12 +25,17 @@ overload scenario (p99 vs SLO target vs the ungated baseline).  The
 ``longctx`` block (schema v3) records the split-KV flash-decoding
 scenario: tuned vs unsplit lane-utilization proxy tok/s at the longest
 swept context, the tuned split factor, and token equality vs the
-oracle.  CI runs ``--quick`` and fails (rc=1) when any engine's
-``identical_tokens`` is False, when the drift scenario does not
-recalibrate back under the gate, when the token bucket misses its SLO,
-or when the tuned split stops beating the unsplit kernel
-(``longctx_ok``).  ``benchmarks/trajectory/compare.py`` then gates
-tok/s against the previous committed snapshot.
+oracle.  The ``cluster`` block (schema v4) records the traffic-scaling
+scenario at one and at several replicas: round-robin vs cost-aware
+placement tok/s, p50/p99 latency, shed rate, reroutes, token
+conservation, and the cost-model-chosen topology.  CI runs ``--quick``
+and fails (rc=1) when any engine's ``identical_tokens`` is False, when
+the drift scenario does not recalibrate back under the gate, when the
+token bucket misses its SLO, when the tuned split stops beating the
+unsplit kernel (``longctx_ok``), or when the cluster loses tokens /
+single-replica byte-identity (``cluster_ok``).
+``benchmarks/trajectory/compare.py`` then gates tok/s against the
+previous committed snapshot.
 """
 from __future__ import annotations
 
@@ -44,13 +49,35 @@ try:
 except ImportError:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-SCHEMA = "bench_serve/v3"
-BENCH_ID = 7          # the PR index this snapshot records
+SCHEMA = "bench_serve/v4"
+BENCH_ID = 8          # the PR index this snapshot records
+
+
+def validate_bench_doc(doc: dict) -> dict:
+    """Refuse non-bench / newer-versioned JSON loudly (the
+    ``telemetry.validate_snapshot`` discipline)."""
+    if not isinstance(doc, dict):
+        raise ValueError("bench document must be a JSON object")
+    schema = doc.get("schema", "")
+    if not schema.startswith("bench_serve/"):
+        raise ValueError(f"not a bench_serve document "
+                         f"(schema={schema!r}, expected {SCHEMA!r})")
+    version = int(schema.rsplit("/v", 1)[-1] or 0)
+    if version > int(SCHEMA.rsplit("/v", 1)[-1]):
+        raise ValueError(
+            f"bench_serve schema v{version} is newer than supported "
+            f"{SCHEMA!r}; upgrade the repo to read this file")
+    for block in ("engines",) + (("cluster",) if version >= 4 else ()):
+        if block not in doc:
+            raise ValueError(f"bench_serve document is missing its "
+                             f"{block!r} block")
+    return doc
 
 
 def run(quick: bool) -> dict:
     from repro.core.campaign.registry import (run_decode_hotpath_cell,
-                                              run_decode_longctx_cell)
+                                              run_decode_longctx_cell,
+                                              run_traffic_scaling_cell)
     from repro.serve.telemetry.scenarios import (run_drift_scenario,
                                                  run_overload_scenario)
     doc = {"schema": SCHEMA, "bench_id": BENCH_ID, "quick": bool(quick),
@@ -70,6 +97,25 @@ def run(quick: bool) -> dict:
     doc["longctx"] = lc
     doc["longctx_ok"] = bool(lc["identical_tokens"]
                              and lc["tuned_speedup"] > 1.0)
+    # cluster traffic-scaling at 2x offered load (v4): one replica must
+    # be byte-identical to the bare engine, several replicas must
+    # conserve every admitted token under preemption + re-route; the
+    # full run additionally demands cost-aware placement beat
+    # round-robin on the skewed trace (quick traces are too short for a
+    # robust ordering, so CI gates correctness and the committed
+    # full-mode snapshot carries the perf evidence)
+    doc["cluster"] = {}
+    for r in (1, 2):
+        doc["cluster"][f"r{r}"] = run_traffic_scaling_cell(
+            {"replicas": r, "load": 2.0}, quick=quick)
+    cl_ok = all(m["identical_tokens"] and m["rr_conserved"]
+                and m["ca_conserved"] and m["rr_shed_rate"] <= 0.5
+                and m["ca_shed_rate"] <= 0.5
+                for m in doc["cluster"].values())
+    if not quick:
+        m = doc["cluster"]["r2"]
+        cl_ok = cl_ok and m["speedup_tok_s"] > 1.0 and m["p99_ratio"] > 1.0
+    doc["cluster_ok"] = bool(cl_ok)
     doc["identical_tokens"] = bool(
         all(m["identical_tokens"] for m in doc["engines"].values())
         and lc["identical_tokens"])
@@ -115,9 +161,17 @@ def main(argv=None) -> int:
           f"tuned={lc['tuned_proxy_tok_s']:.1f} tok/s "
           f"(x{lc['tuned_speedup']:.2f}) "
           f"identical_tokens={lc['identical_tokens']}")
+    for tag, m in doc["cluster"].items():
+        print(f"cluster/{tag}: rr={m['rr_tok_per_s']:.1f} tok/s "
+              f"ca={m['ca_tok_per_s']:.1f} tok/s "
+              f"(x{m['speedup_tok_s']:.2f}) "
+              f"p99 {m['rr_p99_s']:.2f}s -> {m['ca_p99_s']:.2f}s  "
+              f"shed={m['ca_shed_rate']:.2f} reroutes={m['ca_reroutes']} "
+              f"identical_tokens={m['identical_tokens']} "
+              f"conserved={m['rr_conserved'] and m['ca_conserved']}")
     print(f"wrote {out}")
     return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]
-                 and doc["longctx_ok"]) else 1
+                 and doc["longctx_ok"] and doc["cluster_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -7,8 +7,8 @@ times the prior value (default 0.6 — the committed snapshots come from
 different machines and ``--quick`` runs, so only a collapse should
 fail, not jitter).  Improvements and new scenarios never fail; a
 scenario is only compared when BOTH consecutive snapshots carry it,
-which is what lets the schema grow (v2 -> v3 added ``longctx``)
-without breaking the walk.
+which is what lets the schema grow (v2 -> v3 added ``longctx``,
+v3 -> v4 added ``cluster``) without breaking the walk.
 
   python benchmarks/trajectory/compare.py            # gate the dir
   python benchmarks/trajectory/compare.py --tolerance 0.5
@@ -57,6 +57,10 @@ def scenarios(doc: dict) -> dict[str, float]:
             if key in lc:
                 name = key[: -len("_proxy_tok_s")]
                 s[f"longctx.ctx{ctx}.{name}"] = float(lc[key])
+    for tag, m in doc.get("cluster", {}).items():   # v4: traffic scaling
+        for key in ("rr_tok_per_s", "ca_tok_per_s"):
+            if key in m:
+                s[f"cluster.{tag}.{key[:-len('_tok_per_s')]}"] = float(m[key])
     return s
 
 

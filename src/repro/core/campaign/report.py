@@ -202,6 +202,31 @@ def telemetry_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def traffic_scaling_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Cluster traffic-scaling evidence from a ``traffic_scaling`` result
+    file: round-robin vs cost-aware tok/s and tail latency per
+    (replicas, load) point, the shed/conservation/identity columns CI
+    greps, and the cost-model-chosen topology for the device budget."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        name = f"traffic_scaling/r{m['replicas']}_load{m['load']:g}"
+        derived = (f"rr_tok_s={m['rr_tok_per_s']:.1f};"
+                   f"ca_tok_s={m['ca_tok_per_s']:.1f};"
+                   f"speedup={m['speedup_tok_s']:.2f};"
+                   f"rr_p99_s={m['rr_p99_s']:.2f};"
+                   f"ca_p99_s={m['ca_p99_s']:.2f};"
+                   f"p99_ratio={m['p99_ratio']:.2f};"
+                   f"shed_rr={m['rr_shed_rate']:.2f};"
+                   f"shed_ca={m['ca_shed_rate']:.2f};"
+                   f"reroutes={m['ca_reroutes']};"
+                   f"identical={m['identical_tokens']};"
+                   f"conserved={m['rr_conserved'] and m['ca_conserved']};"
+                   f"topology={m['topology_replicas']}x"
+                   f"[{m['topology_data']},{m['topology_model']}]")
+        rows.append((name, 0.0, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -213,6 +238,7 @@ _TABLE_FOR = {
     "decode_hotpath": decode_hotpath_table,
     "decode_longctx": decode_longctx_table,
     "telemetry_replay": telemetry_table,
+    "traffic_scaling": traffic_scaling_table,
 }
 
 

@@ -117,6 +117,33 @@ def analytic_serve_bytes(cfg, cell, n_devices: int, n_model: int = 16,
     return P_stream + cache
 
 
+def analytic_route_bytes(cfg, prompt_len: int,
+                         filled_tokens: int = 0) -> float:
+    """Bytes one inter-replica route (or re-route) of a request moves or
+    abandons — what the cluster router's cost-aware placement charges a
+    candidate replica on top of its queue.
+
+    Two terms:
+
+    * the prompt token ids cross the datacenter fabric to the target
+      host (4 B int32 each) — the only traffic a FRESH placement pays,
+      which is why first placement is near-free;
+    * any KV already materialized on the source replica is thrown away
+      and re-written on the target: the filled prefix's cache bytes, the
+      prefill replay's write traffic.  Re-routing a half-prefilled
+      eviction victim therefore competes against its local front-requeue
+      (which replays the same prefix but moves no tokens) — exactly the
+      tradeoff ``serve.cluster.policy.CostAwarePolicy.reroute`` prices.
+    """
+    tok_bytes = 4.0 * max(int(prompt_len), 0)
+    filled = min(max(int(filled_tokens), 0), max(int(prompt_len), 0))
+    if filled == 0:
+        return tok_bytes
+    from repro.configs.base import ShapeCell
+    cell = ShapeCell("route", "prefill", filled, 1)
+    return tok_bytes + cache_bytes(cfg, cell)
+
+
 def analytic_step_bytes(cfg, cell, n_devices: int, accum: int = 1,
                         n_model: int = 16, donated: bool = False) -> float:
     if cell.kind == "train":

@@ -19,8 +19,11 @@ _EXPORTS = {
     "BlockAllocator": "paging",
     "blocks_for_tokens": "paging",
     "ChunkedPrefillScheduler": "scheduler",
+    "Router": "cluster",
+    "ServingCluster": "cluster",
 }
-_SUBMODULES = ("engine", "paging", "scheduler", "sim", "telemetry")
+_SUBMODULES = ("cluster", "engine", "paging", "scheduler", "sim",
+               "telemetry")
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 

@@ -1,0 +1,82 @@
+"""Cluster-level telemetry: one TelemetryController + MetricsSink PER
+replica (a controller's ``bind`` refuses a second engine — the drift
+buckets are shape-derived per engine), aggregated here with per-replica
+tags.
+
+The aggregation is deliberately thin: per-replica sinks stay the source
+of truth (ring capacity, lifetime totals, drift events all per-engine),
+and :class:`ClusterTelemetry` only merges at read time — ``summary()``
+recomputes the cluster-wide request p50/p99 over ALL replicas' request
+records (a mean of per-replica percentiles would be wrong), and
+``export_jsonl`` re-tags each replica's lines with ``"replica": i`` so
+one shipped file carries the whole cluster.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.serve.telemetry.control import TelemetryController
+from repro.serve.telemetry.metrics import MetricsSink, quantile
+
+
+class ClusterTelemetry:
+    """N controllers, one per replica; merged read-side views.
+
+    ``controller(i)`` hands out the i-th controller — exactly what
+    ``ServingCluster.build`` passes to the i-th replica's constructor.
+    Controller knobs (``latency_model``, ``drift``, ``recalibrate``)
+    apply to every replica identically.
+    """
+
+    def __init__(self, n_replicas: int, *, capacity: int = 4096,
+                 latency_model=None, drift=False, recalibrate: bool = False):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        self.sinks: List[MetricsSink] = [MetricsSink(capacity=capacity)
+                                         for _ in range(n_replicas)]
+        self.controllers: List[TelemetryController] = [
+            TelemetryController(sink, drift=drift,
+                                latency_model=latency_model,
+                                recalibrate=recalibrate)
+            for sink in self.sinks]
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.sinks)
+
+    def controller(self, i: int) -> TelemetryController:
+        return self.controllers[i]
+
+    # -- merged views ---------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """Cluster block plus the per-replica summaries verbatim."""
+        per_replica = [s.summary() for s in self.sinks]
+        lat = [r.latency_s for s in self.sinks for r in s.requests()]
+        return {
+            "n_replicas": self.n_replicas,
+            "requests": sum(s.total_requests for s in self.sinks),
+            "steps": sum(s.total_steps for s in self.sinks),
+            "latency_p50_s": quantile(lat, 0.50),
+            "latency_p99_s": quantile(lat, 0.99),
+            "per_replica": per_replica,
+        }
+
+    def request_latencies(self) -> List[float]:
+        return [r.latency_s for s in self.sinks for r in s.requests()]
+
+    def export_jsonl(self, path: "Path | str") -> Path:
+        """Every replica's ring, one tagged JSON object per line, each
+        carrying its ``"replica"`` index next to the ``"record"`` tag."""
+        out = Path(path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        with out.open("w") as fh:
+            for i, sink in enumerate(self.sinks):
+                tmp = out.with_suffix(f".r{i}.tmp")
+                sink.export_jsonl(tmp)
+                for line in tmp.read_text().splitlines():
+                    rec = json.loads(line)
+                    fh.write(json.dumps({"replica": i, **rec}) + "\n")
+                tmp.unlink()
+        return out

@@ -1,0 +1,172 @@
+"""The cluster's front door: one :class:`Router` in front of N engine
+replicas, owning the cluster-wide request id space and the two routing
+decisions — where a fresh request lands (``policy.place``) and whether
+an eviction victim moves to another replica (``policy.reroute``).
+
+The router does NOT re-implement batching.  Each replica keeps its own
+shadow-step pipeline (chunked prefill, fused decode, preemption) exactly
+as a bare engine; the router only chooses which replica's ``submit``
+a request reaches, then sweeps finished requests out of the replicas'
+``done`` dicts into its own, keyed by cluster id.  That is what makes
+admission O(1) per request regardless of replica count: continuous
+batching stays inside each replica, and cross-replica work only happens
+at the two seams (placement, eviction).
+
+Re-routing rides the scheduler's ``requeue_policy`` hook: when a replica
+evicts a victim, the router's reclaim closure asks the policy whether
+another replica would finish it sooner (counting the route traffic —
+see ``CostAwarePolicy.reroute``).  If yes, the victim is re-submitted to
+the target WITH ITS ORIGINAL ``submitted_s`` so latency accounting
+survives the move, and the closure returns True — the source scheduler
+drops it.  If no (or the request already moved ``max_reroutes`` times —
+a ping-pong damper), the closure returns False and the source
+front-requeues as a single-replica engine would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.cluster.policy import (PlacementPolicy, make_policy,
+                                        predicted_queue_seconds)
+
+
+@dataclasses.dataclass
+class RouteStats:
+    """Cumulative router counters (the cluster-tier analogue of
+    ``EngineStats``; documented in docs/ops-runbook.md)."""
+    submitted: int = 0              # requests accepted and placed
+    shed: int = 0                   # requests refused at admission
+    reroutes: int = 0               # eviction victims moved cross-replica
+    front_requeues: int = 0         # eviction victims kept on their source
+    decisions: int = 0              # placement + reroute decisions taken
+    routed: List[int] = dataclasses.field(default_factory=list)  # per replica
+
+
+class Router:
+    """Place requests across replicas; reclaim eviction victims.
+
+    Parameters
+    ----------
+    replicas:
+        Live engine objects (``ServingEngine`` or ``PagedServingEngine``).
+        Replicas with a chunked-prefill scheduler get the reclaim closure
+        installed on ``scheduler.requeue_policy``; slot engines never
+        preempt, so they route at placement only.
+    policy:
+        A :class:`PlacementPolicy` instance or its name
+        ('round_robin' | 'least_loaded' | 'cost_aware').
+    shed_wait_s:
+        Optional admission ceiling: a request whose chosen replica already
+        carries more than this many predicted queue-seconds is SHED
+        (``submit`` returns None) instead of enqueued.  None = never shed.
+    max_reroutes:
+        Per-request cap on cross-replica moves; after this many the
+        victim always front-requeues at its current replica.
+    """
+
+    def __init__(self, replicas: List, policy="cost_aware",
+                 shed_wait_s: Optional[float] = None,
+                 max_reroutes: int = 3):
+        if not replicas:
+            raise ValueError("Router needs at least one replica")
+        self.replicas = list(replicas)
+        self.policy: PlacementPolicy = make_policy(policy)
+        self.shed_wait_s = shed_wait_s
+        self.max_reroutes = max_reroutes
+        self.done: Dict[int, object] = {}           # crid -> Request
+        self.stats = RouteStats(routed=[0] * len(self.replicas))
+        self._next_crid = 0
+        self._local: Dict[int, Tuple[int, int]] = {}    # crid -> (i, rid)
+        self._origin: Dict[Tuple[int, int], int] = {}   # (i, rid) -> crid
+        self._moves: Dict[int, int] = {}                # crid -> reroute count
+        for i, eng in enumerate(self.replicas):
+            sched = getattr(eng, "scheduler", None)
+            if sched is not None:
+                if sched.requeue_policy is not None:
+                    raise ValueError(
+                        f"replica {i} already has a requeue_policy; "
+                        f"a replica can serve at most one router")
+                sched.requeue_policy = self._make_reclaim(i)
+
+    # -- admission ------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> Optional[int]:
+        """Place one request; returns its cluster id, or None if shed."""
+        i = self.policy.place(len(prompt), max_new_tokens, self.replicas)
+        self.stats.decisions += 1
+        if (self.shed_wait_s is not None
+                and predicted_queue_seconds(self.replicas[i])
+                > self.shed_wait_s):
+            self.stats.shed += 1
+            return None
+        rid = self.replicas[i].submit(prompt, max_new_tokens=max_new_tokens,
+                                      eos_id=eos_id)
+        crid = self._next_crid
+        self._next_crid += 1
+        self._local[crid] = (i, rid)
+        self._origin[(i, rid)] = crid
+        self.stats.submitted += 1
+        self.stats.routed[i] += 1
+        return crid
+
+    # -- eviction reclaim -----------------------------------------------------
+    def _make_reclaim(self, src: int):
+        def reclaim(req) -> bool:
+            crid = self._origin.get((src, req.rid))
+            if crid is None:            # not router-owned (direct submit)
+                return False
+            self.stats.decisions += 1
+            if self._moves.get(crid, 0) >= self.max_reroutes:
+                self.stats.front_requeues += 1
+                return False
+            tgt = self.policy.reroute(req, src, self.replicas)
+            if tgt is None or tgt == src:
+                self.stats.front_requeues += 1
+                return False
+            self._move(crid, req, src, tgt)
+            return True
+        return reclaim
+
+    def _move(self, crid: int, req, src: int, tgt: int) -> None:
+        """Re-submit an eviction victim on ``tgt``.  The victim replays
+        from scratch there (its KV was freed by the eviction); keeping
+        the original ``submitted_s`` keeps its latency honest."""
+        del self._origin[(src, self._local[crid][1])]
+        new_rid = self.replicas[tgt].submit(
+            req.prompt, max_new_tokens=req.max_new_tokens,
+            eos_id=req.eos_id, submitted_s=req.submitted_s)
+        self._local[crid] = (tgt, new_rid)
+        self._origin[(tgt, new_rid)] = crid
+        self._moves[crid] = self._moves.get(crid, 0) + 1
+        self.stats.reroutes += 1
+        self.stats.routed[tgt] += 1
+
+    # -- completion -----------------------------------------------------------
+    def collect(self) -> int:
+        """Sweep finished requests from every replica's ``done`` dict into
+        ``self.done`` keyed by cluster id.  Returns how many moved this
+        sweep.  Non-router-owned requests are left in place."""
+        n = 0
+        for i, eng in enumerate(self.replicas):
+            for rid in [r for r in eng.done if (i, r) in self._origin]:
+                crid = self._origin.pop((i, rid))
+                self.done[crid] = eng.done.pop(rid)
+                del self._local[crid]
+                self._moves.pop(crid, None)
+                n += 1
+        return n
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        """Router-owned requests admitted but not yet collected."""
+        return len(self._local)
+
+    def queue_depths(self) -> List[int]:
+        return [len(eng.queue) for eng in self.replicas]
+
+    def predicted_waits(self) -> List[float]:
+        return [predicted_queue_seconds(eng) for eng in self.replicas]

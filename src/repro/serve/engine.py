@@ -269,7 +269,13 @@ class ServingEngine(_TunedDispatch):
             self._decode = jax.jit(model.decode)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               submitted_s: Optional[float] = None) -> int:
+        """Enqueue one request.  ``submitted_s`` is the external-admission
+        hook: the cluster router (``serve.cluster``) re-submits a
+        re-routed request with its ORIGINAL arrival time so per-request
+        latency accounting survives the move; the default stamps this
+        engine's clock."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             raise ValueError(f"prompt of {len(prompt)} tokens cannot fit "
@@ -277,7 +283,8 @@ class ServingEngine(_TunedDispatch):
                              "slot)")
         rid = next(self._rid)
         self.queue.append(Request(rid, prompt, max_new_tokens, eos_id,
-                                  submitted_s=self._clock.time()))
+                                  submitted_s=self._clock.time()
+                                  if submitted_s is None else submitted_s))
         return rid
 
     def kv_cache_bytes(self) -> int:
@@ -656,7 +663,11 @@ class PagedServingEngine(_TunedDispatch):
 
     # -- public ---------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               submitted_s: Optional[float] = None) -> int:
+        """Enqueue one request.  ``submitted_s`` is the external-admission
+        hook (see the slot engine's ``submit``): a cluster re-route keeps
+        the request's original arrival time for latency accounting."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             # over-long prompts must be rejected HERE: mid-trace they
@@ -667,7 +678,8 @@ class PagedServingEngine(_TunedDispatch):
                              "slot)")
         rid = next(self._rid)
         self.scheduler.submit(Request(rid, prompt, max_new_tokens, eos_id,
-                                      submitted_s=self._clock.time()))
+                                      submitted_s=self._clock.time()
+                                      if submitted_s is None else submitted_s))
         return rid
 
     @property

@@ -27,13 +27,17 @@ prefill work with every decode step:
 Preemption is the engine's job (it owns the allocator); the scheduler
 only owns the queue and exposes ``requeue`` so an evicted request goes
 back to the queue *front* and is replayed from scratch (greedy decode is
-deterministic, so a restart reproduces the same tokens).
+deterministic, so a restart reproduces the same tokens).  A
+``requeue_policy`` hook lets an external owner — the cluster router
+(``serve.cluster``) — *reclaim* an evicted request instead (re-route it
+to another replica); with no hook installed the front-requeue behavior
+is byte-identical to the single-replica engine.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,11 +63,13 @@ class ChunkedPrefillScheduler:
     """Chunked-prefill admission policy (see module docstring)."""
 
     def __init__(self, chunk_size: int = 32, *,
-                 step_budget_s: Optional[float] = None):
+                 step_budget_s: Optional[float] = None,
+                 requeue_policy: Optional[Callable[[object], bool]] = None):
         if chunk_size <= 0:
             raise ValueError("chunk_size must be positive")
         self.chunk_size = chunk_size
         self.step_budget_s = step_budget_s
+        self.requeue_policy = requeue_policy
         self.queue: Deque = deque()
 
     # -- queue ownership ------------------------------------------------------
@@ -72,7 +78,16 @@ class ChunkedPrefillScheduler:
 
     def requeue(self, req) -> None:
         """Re-enqueue an evicted request at the FRONT: it was admitted
-        before anything still waiting, so it keeps its FIFO priority."""
+        before anything still waiting, so it keeps its FIFO priority.
+
+        When a ``requeue_policy`` hook is installed (the cluster router's
+        reclaim point) and it returns True, the request has been CLAIMED
+        by the hook's owner — typically re-routed to another replica —
+        and does not re-enter this queue.  A hook returning False (or no
+        hook, the default) preserves the single-replica front-requeue
+        byte-for-byte."""
+        if self.requeue_policy is not None and self.requeue_policy(req):
+            return
         self.queue.appendleft(req)
 
     def take(self, req) -> None:

@@ -1,2 +1,5 @@
-from repro.sharding.plans import (named_tree, sanitize_specs,  # noqa
-                                  train_shardings, serve_shardings)
+from repro.sharding.plans import (ClusterTopology, RankedPlan,  # noqa
+                                  candidate_mesh_shapes, named_tree,
+                                  rank_cluster_topologies, rank_plans,
+                                  sanitize_specs, serve_shardings,
+                                  train_shardings)

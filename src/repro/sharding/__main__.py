@@ -1,0 +1,3 @@
+from repro.sharding.cli import main
+
+raise SystemExit(main())

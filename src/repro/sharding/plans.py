@@ -150,6 +150,53 @@ def rank_plans(cfg, cell, n_devices: int,
     return plans
 
 
+@dataclasses.dataclass
+class ClusterTopology:
+    """One way to spend a device budget on a serving cluster: how many
+    engine replicas, and the best-ranked (data, model) mesh inside each."""
+    n_replicas: int
+    plan: RankedPlan                # per-replica factorization (rank_plans)
+    predicted_tok_s: float          # n_replicas x batch / per-replica step_s
+
+    @property
+    def devices_per_replica(self) -> int:
+        return self.plan.data * self.plan.model
+
+    def describe(self) -> str:
+        return (f"replicas={self.n_replicas} x [data={self.plan.data} "
+                f"model={self.plan.model}]: "
+                f"predicted={self.predicted_tok_s:.1f} tok/s "
+                f"(step={self.plan.step_s:.3e}s, "
+                f"{self.plan.prediction.bottleneck}-bound)")
+
+
+def rank_cluster_topologies(cfg, cell, n_devices: int,
+                            cost_model: Optional[CostModel] = None,
+                            max_replicas: Optional[int] = None,
+                            ) -> List["ClusterTopology"]:
+    """Factor a device budget into ``replicas x (data, model)`` and rank
+    by predicted cluster throughput.
+
+    For every replica count dividing the budget, the per-replica mesh is
+    chosen by ``rank_plans`` over the remaining devices and the cluster's
+    predicted rate is ``n_replicas x global_batch / step_s`` — replicas
+    serve independent traffic, so their rates add while their step time
+    is the per-replica plan's.  Returned descending by predicted tok/s
+    (ties to FEWER replicas: fewer routing seams for the same rate);
+    ``[0]`` is the topology ``serve.cluster.ServingCluster.build`` uses
+    when handed a device budget."""
+    tops: List[ClusterTopology] = []
+    for r in range(1, n_devices + 1):
+        if n_devices % r or (max_replicas is not None and r > max_replicas):
+            continue
+        plan = rank_plans(cfg, cell, n_devices // r, cost_model)[0]
+        rate = r * cell.global_batch / max(plan.step_s, 1e-30)
+        tops.append(ClusterTopology(n_replicas=r, plan=plan,
+                                    predicted_tok_s=rate))
+    tops.sort(key=lambda t: (-t.predicted_tok_s, t.n_replicas))
+    return tops
+
+
 def serve_shardings(model, mesh: Mesh, cell):
     """Returns (param_sh, input_sh, shapes, log) for prefill/decode cells."""
     log: List[str] = []

@@ -1,0 +1,415 @@
+"""Multi-replica cluster invariants on the deterministic sim harness.
+
+The exact-trace contracts the ISSUE's cluster tier has to honor:
+
+* one replica is a no-op wrapper — byte-identical tokens and timestamps
+  vs a bare paged engine on the same scripted trace;
+* the scheduler's new ``requeue_policy`` hook defaults to the old
+  unconditional front-requeue (single-replica behavior byte-identical),
+  and a hook that declines (returns False) changes nothing;
+* at two-plus replicas every admitted token is conserved under
+  preemption + cross-replica re-route, and every request's tokens stay
+  the greedy-exact ``expected_tokens`` sequence regardless of where it
+  bounced;
+* on the skewed trace the cost-aware policy strictly beats round-robin
+  on cluster wall time and p99 latency (exact virtual-clock numbers);
+* the router's bookkeeping (routed counts, shed, reroute caps) and the
+  cluster telemetry merge are pinned.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import PagedServingEngine
+from repro.serve.cluster import (CostAwarePolicy, LeastLoadedPolicy,
+                                 RoundRobinPolicy, Router, ServingCluster,
+                                 make_policy, predicted_queue_seconds,
+                                 serve_trace, skewed_trace, unit_latency)
+from repro.serve.scheduler import ChunkedPrefillScheduler
+from repro.serve.sim import (FakeCostModel, FakeModel, SimClock, drive,
+                             expected_tokens)
+
+VOCAB = 97
+STEP = unit_latency(decode_s=0.5, chunk_s=0.25, overhead_s=0.01)
+
+
+def build_cluster(n, policy="cost_aware", clock=None, shed_wait_s=None,
+                  **kw):
+    clock = clock if clock is not None else SimClock()
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("n_blocks", 24)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("cost_model", FakeCostModel(decode_s=0.5, prefill_s=0.25))
+    cl = ServingCluster.build(FakeModel(vocab=VOCAB), None, n_replicas=n,
+                              policy=policy, clock=clock,
+                              shed_wait_s=shed_wait_s, **kw)
+    return cl, clock
+
+
+def run_trace(cl, clock, trace):
+    return serve_trace(cl, trace, clock, step_seconds=STEP, min_dt=0.25)
+
+
+TRACE = skewed_trace(12, vocab=VOCAB, period=2, long_len=24, short_len=4,
+                     long_new=12, short_new=4, interval_s=1.0, load=2.0)
+
+
+# ---------------------------------------------------------------------------
+# replica_count=1: the cluster is a transparent wrapper
+# ---------------------------------------------------------------------------
+
+
+def test_single_replica_byte_identical_to_bare_engine():
+    cl, clock = build_cluster(1)
+    admitted = run_trace(cl, clock, TRACE)
+    assert len(cl.done) == len(TRACE) and cl.stats.shed == 0
+
+    clock2 = SimClock()
+    eng = PagedServingEngine(FakeModel(vocab=VOCAB), None, max_batch=4,
+                             max_len=64, n_blocks=24, block_size=8,
+                             chunk_size=8, clock=clock2,
+                             cost_model=FakeCostModel(decode_s=0.5,
+                                                      prefill_s=0.25))
+    rids = drive(eng, clock2, TRACE, dt=0.5)
+    assert len(eng.done) == len(TRACE)
+    # crids and rids both enumerate the trace in arrival order
+    for (crid, t_c), (rid, t_b) in zip(sorted(admitted.items()),
+                                       sorted(rids.items())):
+        assert t_c == t_b
+        assert list(cl.done[crid].tokens) == list(eng.done[rid].tokens)
+        # stamped at the admitting tick, never before the arrival
+        assert cl.done[crid].submitted_s >= t_c
+
+
+def test_single_replica_tokens_greedy_exact():
+    cl, clock = build_cluster(1)
+    run_trace(cl, clock, TRACE)
+    for crid in cl.done:
+        _, prompt, new, eos = TRACE[crid]
+        assert list(cl.done[crid].tokens) == expected_tokens(
+            prompt, new, VOCAB, eos)
+
+
+# ---------------------------------------------------------------------------
+# requeue_policy: default + declining hook are byte-identical (regression
+# for the unconditional-front-requeue fix)
+# ---------------------------------------------------------------------------
+
+
+def _run_bare(requeue_policy, probe):
+    clock = SimClock()
+    eng = PagedServingEngine(FakeModel(vocab=VOCAB), None, max_batch=4,
+                             max_len=48, n_blocks=8, block_size=8,
+                             chunk_size=8, clock=clock)
+    if requeue_policy is not None:
+        eng.scheduler.requeue_policy = requeue_policy
+    trace = skewed_trace(8, vocab=VOCAB, period=2, long_len=24, short_len=4,
+                         long_new=12, short_new=4, interval_s=1.0, load=4.0)
+    rids = drive(eng, clock, trace, dt=0.5, max_steps=2000)
+    assert eng.stats.preemptions > 0, "trace must exercise the requeue path"
+    if probe is not None:
+        assert probe["calls"] == eng.stats.preemptions
+    return [(rid, list(eng.done[rid].tokens), eng.done[rid].finished_s)
+            for rid in sorted(eng.done)]
+
+
+def test_requeue_policy_default_and_declining_hook_identical():
+    baseline = _run_bare(None, None)
+    probe = {"calls": 0}
+
+    def decline(req):
+        probe["calls"] += 1
+        return False
+
+    assert _run_bare(decline, probe) == baseline
+
+
+def test_requeue_policy_claim_removes_from_queue():
+    sched = ChunkedPrefillScheduler(chunk_size=8)
+
+    class Req:
+        prompt = np.arange(4)
+        max_new_tokens = 2
+    claimed = []
+    sched.requeue_policy = lambda r: claimed.append(r) is None
+    sched.requeue(Req())
+    assert len(claimed) == 1 and len(sched.queue) == 0
+    sched.requeue_policy = lambda r: False
+    sched.requeue(Req())
+    assert len(sched.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# replica_count>=2: conservation under preemption + re-route
+# ---------------------------------------------------------------------------
+
+
+def tight_trace(n=10):
+    # pools of 8x8-token blocks per replica: a long request needs 5, so
+    # concurrent longs evict each other -> preemptions + reroute chances
+    return skewed_trace(n, vocab=VOCAB, period=2, long_len=24, short_len=4,
+                        long_new=12, short_new=4, interval_s=1.0, load=4.0)
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "least_loaded",
+                                    "cost_aware"])
+def test_tokens_conserved_under_preemption_and_reroute(policy):
+    cl, clock = build_cluster(2, policy=policy, max_len=48, n_blocks=8)
+    trace = tight_trace()
+    admitted = run_trace(cl, clock, trace)
+    assert sum(e.stats.preemptions for e in cl.replicas) > 0
+    assert len(cl.done) == len(admitted) == len(trace)
+    total = 0
+    for crid in cl.done:
+        _, prompt, new, eos = trace[crid]
+        assert list(cl.done[crid].tokens) == expected_tokens(
+            prompt, new, VOCAB, eos)
+        total += len(cl.done[crid].tokens)
+    assert total == sum(len(expected_tokens(p, n, VOCAB, e))
+                        for _, p, n, e in trace)
+
+
+def test_cost_aware_reroutes_and_tokens_survive_the_move():
+    cl, clock = build_cluster(2, policy="cost_aware", max_len=48, n_blocks=8)
+    trace = tight_trace()
+    run_trace(cl, clock, trace)
+    assert cl.stats.reroutes > 0, "tight pools must trigger a re-route"
+    assert cl.stats.reroutes + cl.stats.front_requeues == sum(
+        e.stats.preemptions for e in cl.replicas)
+    for crid in cl.done:      # the moved requests still decode exactly
+        _, prompt, new, eos = trace[crid]
+        assert list(cl.done[crid].tokens) == expected_tokens(
+            prompt, new, VOCAB, eos)
+
+
+def test_round_robin_never_reroutes():
+    cl, clock = build_cluster(2, policy="round_robin", max_len=48,
+                              n_blocks=8)
+    run_trace(cl, clock, tight_trace())
+    assert cl.stats.reroutes == 0
+    assert cl.stats.front_requeues == sum(e.stats.preemptions
+                                          for e in cl.replicas)
+
+
+# ---------------------------------------------------------------------------
+# the campaign's headline: cost-aware beats round-robin on the skewed
+# trace, in exact virtual-clock arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_cost_aware_beats_round_robin_on_skewed_trace():
+    results = {}
+    for policy in ("round_robin", "cost_aware"):
+        cl, clock = build_cluster(2, policy=policy)
+        admitted = run_trace(cl, clock, TRACE)
+        lats = sorted(cl.done[c].finished_s - admitted[c] for c in cl.done)
+        results[policy] = {
+            "wall": clock.t,
+            "p99": lats[int(0.99 * (len(lats) - 1))],
+            "tokens": {c: list(cl.done[c].tokens) for c in cl.done},
+        }
+    rr, ca = results["round_robin"], results["cost_aware"]
+    assert ca["wall"] < rr["wall"]          # higher tok/s, same tokens
+    assert ca["p99"] < rr["p99"]
+    assert ca["tokens"] == rr["tokens"]     # placement is not semantics
+
+
+# ---------------------------------------------------------------------------
+# router bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_router_shed_and_routed_accounting():
+    cl, clock = build_cluster(2, policy="round_robin", shed_wait_s=3.0)
+    trace = skewed_trace(16, vocab=VOCAB, period=2, long_len=24,
+                         short_len=4, long_new=12, short_new=4,
+                         interval_s=1.0, load=8.0)
+    admitted = run_trace(cl, clock, trace)
+    st = cl.stats
+    assert st.shed > 0 and st.submitted == len(admitted)
+    assert st.shed + st.submitted == len(trace)
+    assert sum(st.routed) >= st.submitted   # routed counts re-routes too
+    assert len(cl.done) == len(admitted)    # shed requests are refused,
+    #                                         admitted ones all finish
+
+
+def test_router_refuses_double_ownership_and_unknown_policy():
+    cl, _ = build_cluster(2)
+    with pytest.raises(ValueError):
+        Router(cl.replicas, policy="round_robin")
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_reroute_cap_limits_ping_pong():
+    cl, clock = build_cluster(2, policy="cost_aware", max_len=48,
+                              n_blocks=8)
+    cl.router.max_reroutes = 0
+    run_trace(cl, clock, tight_trace())
+    assert cl.stats.reroutes == 0           # cap forces front-requeue
+    assert len(cl.done) == len(tight_trace())
+
+
+def test_predicted_queue_seconds_empty_and_loaded():
+    cl, _ = build_cluster(1)
+    eng = cl.replicas[0]
+    assert predicted_queue_seconds(eng) == 0.0
+    eng.submit(np.arange(8, dtype=np.int32), max_new_tokens=4)
+    # 1 chunk * 0.25s + 4 tokens * (0.5s / 4 rows)
+    assert predicted_queue_seconds(eng) == pytest.approx(0.75)
+
+
+def test_policy_place_prefers_empty_replica():
+    cl, _ = build_cluster(2)
+    cl.replicas[0].submit(np.arange(8, dtype=np.int32), max_new_tokens=8)
+    for policy in (LeastLoadedPolicy(), CostAwarePolicy()):
+        assert policy.place(4, 4, cl.replicas) == 1
+    assert RoundRobinPolicy().place(4, 4, cl.replicas) == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster telemetry: per-replica controllers, merged views
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_telemetry_merge_and_tags(tmp_path):
+    from repro.serve.cluster import ClusterTelemetry
+    from repro.serve.sim import work_latency_model
+    tel = ClusterTelemetry(2, latency_model=work_latency_model(0.5, 0.25))
+    cl, clock = build_cluster(2, policy="round_robin", telemetry=tel)
+    run_trace(cl, clock, TRACE)
+    s = tel.summary()
+    assert s["n_replicas"] == 2 and len(s["per_replica"]) == 2
+    assert s["requests"] == len(TRACE)
+    assert s["latency_p99_s"] >= s["latency_p50_s"] > 0
+    lines = tel.export_jsonl(tmp_path / "cluster.jsonl").read_text()
+    import json
+    tags = {json.loads(ln)["replica"] for ln in lines.splitlines()}
+    assert tags == {0, 1}
+
+
+def test_build_from_device_budget_uses_cost_model_topology():
+    from repro.configs.base import ShapeCell
+    from repro.core.costmodel import CostModel
+    from repro.sharding.plans import rank_cluster_topologies
+    model = FakeModel(vocab=VOCAB)
+    cm = CostModel.from_named("tpu_v5e")
+    cell = ShapeCell("t", "decode", 64, 4)
+    cluster = ServingCluster.build(model, None, clock=SimClock(),
+                                   cost_model=cm, n_devices=4, cell=cell,
+                                   max_batch=4, max_len=64, n_blocks=24,
+                                   block_size=8, chunk_size=8)
+    top = rank_cluster_topologies(model.cfg, cell, 4, cm)[0]
+    assert cluster.topology is not None
+    assert len(cluster.replicas) == top.n_replicas
+    assert cluster.topology.devices_per_replica * top.n_replicas == 4
+    with pytest.raises(ValueError):
+        ServingCluster.build(model, None)   # neither n_replicas nor budget
+
+
+# ---------------------------------------------------------------------------
+# sharding CLI (satellite): ranked factorization table
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_cli_prints_ranked_tables(capsys):
+    from repro.sharding.cli import main
+    rc = main(["--calibration", "tpu_v5e", "--topology", "4,8,128",
+               "--devices", "4"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "data=" in out and "<- best" in out
+    assert "replicas=" in out
+
+
+def test_sharding_cli_rejects_bad_topology():
+    from repro.sharding.cli import main
+    with pytest.raises(SystemExit):
+        main(["--topology", "8,8"])
+
+
+# ---------------------------------------------------------------------------
+# bench schema v4 round-trip + trajectory pickup
+# ---------------------------------------------------------------------------
+
+
+def test_bench_v4_validate_and_compare_scenarios(tmp_path):
+    import importlib.util
+    import json
+    import sys
+    root = __import__("pathlib").Path(__file__).resolve().parent.parent
+    for name, rel in (("bench_serve", "benchmarks/bench_serve.py"),
+                      ("traj_compare", "benchmarks/trajectory/compare.py")):
+        spec = importlib.util.spec_from_file_location(name, root / rel)
+        mod = importlib.util.module_from_spec(spec)
+        sys.modules[name] = mod
+        spec.loader.exec_module(mod)
+    bench, comp = sys.modules["bench_serve"], sys.modules["traj_compare"]
+
+    assert bench.SCHEMA == "bench_serve/v4" and bench.BENCH_ID == 8
+    doc = {"schema": bench.SCHEMA, "bench_id": 8, "engines": {},
+           "cluster": {"r1": {"rr_tok_per_s": 10.0, "ca_tok_per_s": 11.0},
+                       "r2": {"rr_tok_per_s": 17.0, "ca_tok_per_s": 20.0}}}
+    path = tmp_path / "BENCH_8.json"
+    path.write_text(json.dumps(doc))
+    loaded = bench.validate_bench_doc(json.loads(path.read_text()))
+    assert loaded == doc                                 # round-trip
+    s = comp.scenarios(loaded)
+    assert s["cluster.r1.rr"] == 10.0 and s["cluster.r2.ca"] == 20.0
+    # older schemas still validate (no cluster block required pre-v4)
+    bench.validate_bench_doc({"schema": "bench_serve/v3", "engines": {}})
+    with pytest.raises(ValueError):
+        bench.validate_bench_doc({"schema": "bench_serve/v4",
+                                  "engines": {}})        # missing cluster
+    with pytest.raises(ValueError):
+        bench.validate_bench_doc({"schema": "bench_serve/v99",
+                                  "engines": {}, "cluster": {}})
+    with pytest.raises(ValueError):
+        bench.validate_bench_doc({"schema": "autotune.cache/v1"})
+
+
+def test_committed_trajectory_carries_bench8_cluster():
+    import importlib.util
+    import sys
+    root = __import__("pathlib").Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "traj_compare2", root / "benchmarks/trajectory/compare.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["traj_compare2"] = mod
+    spec.loader.exec_module(mod)
+    traj = mod.load_trajectory(root / "benchmarks/trajectory")
+    ids = [i for i, _ in traj]
+    assert 8 in ids, "BENCH_8.json must be committed with this change"
+    doc = dict(traj)[8]
+    assert doc["schema"] == "bench_serve/v4"
+    assert doc["cluster_ok"] and doc["identical_tokens"]
+    m = doc["cluster"]["r2"]
+    assert m["speedup_tok_s"] > 1.0 and m["p99_ratio"] > 1.0, \
+        "cost-aware placement must beat round-robin in the snapshot"
+    assert mod.compare(traj, tolerance=0.6) == []
+
+
+# ---------------------------------------------------------------------------
+# topology ranking
+# ---------------------------------------------------------------------------
+
+
+def test_rank_cluster_topologies_orders_and_factors():
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ShapeCell
+    from repro.core.costmodel import CostModel
+    from repro.sharding.plans import rank_cluster_topologies
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    cell = ShapeCell("t", "decode", 128, 8)
+    cm = CostModel.from_named("tpu_v5e")
+    tops = rank_cluster_topologies(cfg, cell, 8, cm)
+    assert [t.predicted_tok_s for t in tops] == sorted(
+        (t.predicted_tok_s for t in tops), reverse=True)
+    for t in tops:
+        assert 8 % t.n_replicas == 0
+        assert t.devices_per_replica * t.n_replicas == 8
+        assert t.predicted_tok_s == pytest.approx(
+            t.n_replicas * cell.global_batch / t.plan.step_s)
+    assert rank_cluster_topologies(cfg, cell, 8, cm, max_replicas=1)[
+        0].n_replicas == 1
