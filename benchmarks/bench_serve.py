@@ -28,12 +28,17 @@ swept context, the tuned split factor, and token equality vs the
 oracle.  The ``cluster`` block (schema v4) records the traffic-scaling
 scenario at one and at several replicas: round-robin vs cost-aware
 placement tok/s, p50/p99 latency, shed rate, reroutes, token
-conservation, and the cost-model-chosen topology.  CI runs ``--quick``
-and fails (rc=1) when any engine's ``identical_tokens`` is False, when
-the drift scenario does not recalibrate back under the gate, when the
-token bucket misses its SLO, when the tuned split stops beating the
-unsplit kernel (``longctx_ok``), or when the cluster loses tokens /
-single-replica byte-identity (``cluster_ok``).
+conservation, and the cost-model-chosen topology.  The ``sharded``
+block (schema v5) records the sharded intra-replica decode scenario on
+a forced multi-device CPU host: per (data, model) factorization, token
+byte-identity vs the single-device engine, the one-sync and donation
+invariants, and measured vs cost-model-predicted step time.  CI runs
+``--quick`` and fails (rc=1) when any engine's ``identical_tokens`` is
+False, when the drift scenario does not recalibrate back under the
+gate, when the token bucket misses its SLO, when the tuned split stops
+beating the unsplit kernel (``longctx_ok``), when the cluster loses
+tokens / single-replica byte-identity (``cluster_ok``), or when any
+sharded replica's tokens diverge (``sharded_ok``).
 ``benchmarks/trajectory/compare.py`` then gates tok/s against the
 previous committed snapshot.
 """
@@ -49,8 +54,8 @@ try:
 except ImportError:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-SCHEMA = "bench_serve/v4"
-BENCH_ID = 8          # the PR index this snapshot records
+SCHEMA = "bench_serve/v5"
+BENCH_ID = 9          # the PR index this snapshot records
 
 
 def validate_bench_doc(doc: dict) -> dict:
@@ -67,7 +72,9 @@ def validate_bench_doc(doc: dict) -> dict:
         raise ValueError(
             f"bench_serve schema v{version} is newer than supported "
             f"{SCHEMA!r}; upgrade the repo to read this file")
-    for block in ("engines",) + (("cluster",) if version >= 4 else ()):
+    blocks = ("engines",) + (("cluster",) if version >= 4 else ()) \
+        + (("sharded",) if version >= 5 else ())
+    for block in blocks:
         if block not in doc:
             raise ValueError(f"bench_serve document is missing its "
                              f"{block!r} block")
@@ -116,6 +123,15 @@ def run(quick: bool) -> dict:
         m = doc["cluster"]["r2"]
         cl_ok = cl_ok and m["speedup_tok_s"] > 1.0 and m["p99_ratio"] > 1.0
     doc["cluster_ok"] = bool(cl_ok)
+    # sharded intra-replica decode (v5): a paged replica on each
+    # (data, model) mesh of a forced-8-device CPU host must be
+    # byte-identical to the single-device engine with the one-sync and
+    # donation invariants intact; the measured-vs-predicted step time
+    # per factorization rides along for the trajectory record
+    from repro.core.campaign.registry import run_sharded_decode_cell
+    doc["sharded"] = run_sharded_decode_cell(
+        {"shapes": "1x1,2x1,1x2,2x2"}, quick=quick)
+    doc["sharded_ok"] = bool(doc["sharded"]["identical_all"])
     doc["identical_tokens"] = bool(
         all(m["identical_tokens"] for m in doc["engines"].values())
         and lc["identical_tokens"])
@@ -169,9 +185,20 @@ def main(argv=None) -> int:
               f"shed={m['ca_shed_rate']:.2f} reroutes={m['ca_reroutes']} "
               f"identical_tokens={m['identical_tokens']} "
               f"conserved={m['rr_conserved'] and m['ca_conserved']}")
+    sh = doc["sharded"]
+    for key in sorted(k[:-7] for k in sh if k.endswith("_step_s")
+                      and not k.endswith("_pred_step_s")
+                      and k != "ref_step_s"):
+        print(f"sharded/{key}: step={sh[f'{key}_step_s'] * 1e3:.1f}ms "
+              f"(ref {sh['ref_step_s'] * 1e3:.1f}ms, "
+              f"pred {sh[f'{key}_pred_step_s'] * 1e6:.2f}us) "
+              f"identical_tokens={sh[f'{key}_identical']} "
+              f"sync_ok={sh[f'{key}_sync_ok']} "
+              f"donated={sh[f'{key}_donated']}")
     print(f"wrote {out}")
     return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]
-                 and doc["longctx_ok"] and doc["cluster_ok"]) else 1
+                 and doc["longctx_ok"] and doc["cluster_ok"]
+                 and doc["sharded_ok"]) else 1
 
 
 if __name__ == "__main__":

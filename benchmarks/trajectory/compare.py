@@ -8,7 +8,8 @@ different machines and ``--quick`` runs, so only a collapse should
 fail, not jitter).  Improvements and new scenarios never fail; a
 scenario is only compared when BOTH consecutive snapshots carry it,
 which is what lets the schema grow (v2 -> v3 added ``longctx``,
-v3 -> v4 added ``cluster``) without breaking the walk.
+v3 -> v4 added ``cluster``, v4 -> v5 added ``sharded``) without
+breaking the walk.
 
   python benchmarks/trajectory/compare.py            # gate the dir
   python benchmarks/trajectory/compare.py --tolerance 0.5
@@ -61,6 +62,16 @@ def scenarios(doc: dict) -> dict[str, float]:
         for key in ("rr_tok_per_s", "ca_tok_per_s"):
             if key in m:
                 s[f"cluster.{tag}.{key[:-len('_tok_per_s')]}"] = float(m[key])
+    sh = doc.get("sharded") or {}                   # v5: sharded replica
+    for key, v in sh.items():
+        # step_s is lower-is-better; gate its inverse so the shared
+        # "rate must not collapse" rule applies unchanged
+        if (key.endswith("_step_s") and not key.endswith("_pred_step_s")
+                and key != "ref_step_s" and v):
+            s[f"sharded.{key[:-len('_step_s')]}.steps_per_s"] = \
+                1.0 / float(v)
+    if sh.get("ref_step_s"):
+        s["sharded.ref.steps_per_s"] = 1.0 / float(sh["ref_step_s"])
     return s
 
 

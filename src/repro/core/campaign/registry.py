@@ -779,6 +779,11 @@ def run_traffic_scaling_cell(params: Dict[str, Any], quick: bool = False
         conserved = (len(cl.done) == len(admitted)
                      and all(len(q.tokens) == q.max_new_tokens
                              for q in cl.done.values()))
+        if conserved:
+            # drained-trace invariant: every per-request router dict
+            # (_local/_origin/_moves) must be pruned, or a long-running
+            # cluster leaks bookkeeping per request
+            cl.router.assert_drained()
         tokens_by_policy[key] = {
             round(admitted[c] / (interval_s / load)): list(cl.done[c].tokens)
             for c in cl.done}           # trace index -> tokens
@@ -825,6 +830,59 @@ def run_traffic_scaling_cell(params: Dict[str, Any], quick: bool = False
     out["topology_model"] = top.plan.model
     out["topology_pred_tok_s"] = top.predicted_tok_s
     return out
+
+
+def run_sharded_decode_cell(params: Dict[str, Any], quick: bool = False
+                            ) -> Dict[str, Any]:
+    """Sharded intra-replica decode: the acceptance comparison plus the
+    measured-vs-predicted step time per (data, model) factorization.
+
+    Runs ``serve.sharded_check`` in a subprocess with a forced
+    multi-device CPU host (the flag must precede jax init, so it cannot
+    run in this process): a paged replica on each candidate mesh serves
+    the 32-request acceptance trace and must be byte-identical to the
+    single-device engine with the one-sync and donation invariants
+    intact.  Reported per shape: measured wall-clock per step alongside
+    ``rank_plans``' predicted step time — the measured CPU numbers
+    validate the *mechanism*, the predictions carry the priced-TPU
+    ordering the mesh choice is based on."""
+    from repro.serve.sharded_check import parse_shapes, run_subprocess
+
+    shapes = parse_shapes(params["shapes"])
+    doc = run_subprocess(shapes, devices=int(params.get("devices", 8)),
+                         n_req=8 if quick else 32)
+    out: Dict[str, Any] = {
+        "shapes": params["shapes"], "devices": doc["devices"],
+        "n_req": doc["n_req"], "ref_step_s": doc["reference"]["step_s"],
+        "identical_all": bool(doc["ok"]),
+    }
+    for s in doc["shapes"]:
+        if s.get("skipped"):
+            continue
+        key = f"d{s['data']}m{s['model']}"
+        out[f"{key}_step_s"] = s["step_s"]
+        out[f"{key}_pred_step_s"] = s["predicted_step_s"]
+        out[f"{key}_identical"] = bool(s["identical"])
+        out[f"{key}_donated"] = bool(s["donated"])
+        out[f"{key}_sync_ok"] = bool(s["sync_per_step_ok"])
+        out[f"{key}_preemptions"] = s["preemptions"]
+        out[f"{key}_compactions"] = s["compactions"]
+    return out
+
+
+register(Experiment(
+    name="sharded_decode",
+    description="sharded intra-replica decode: paged replicas on "
+                "(data, model) meshes of a forced multi-device CPU host "
+                "serve the acceptance trace byte-identically to the "
+                "single-device engine, with measured vs cost-model-"
+                "predicted step time per factorization",
+    grid={"shapes": ("1x1,2x1,1x2,2x2",)},
+    quick_grid={"shapes": ("1x1,1x2",)},
+    runner=run_sharded_decode_cell,
+    cost_per_cell_s=300.0,
+    tags=("serve", "sharding", "costmodel"),
+))
 
 
 register(Experiment(

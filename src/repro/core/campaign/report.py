@@ -227,6 +227,31 @@ def traffic_scaling_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def sharded_decode_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Sharded-replica evidence from a ``sharded_decode`` result file:
+    one row per (data, model) factorization with measured step time,
+    the cost model's predicted step time for that mesh, and the
+    byte-identical/sync/donation columns CI greps."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        for key in sorted(k[:-7] for k in m if k.endswith("_step_s")
+                          and not k.endswith("_pred_step_s")
+                          and k != "ref_step_s"):
+            pred = m.get(f"{key}_pred_step_s")
+            derived = (f"step_us={m[f'{key}_step_s'] * 1e6:.1f};"
+                       f"ref_step_us={m['ref_step_s'] * 1e6:.1f};"
+                       f"pred_step_us="
+                       f"{(pred or 0.0) * 1e6:.3f};"
+                       f"identical={m[f'{key}_identical']};"
+                       f"sync_ok={m[f'{key}_sync_ok']};"
+                       f"donated={m[f'{key}_donated']};"
+                       f"preemptions={m[f'{key}_preemptions']};"
+                       f"compactions={m[f'{key}_compactions']}")
+            rows.append((f"sharded_decode/{key}",
+                         float(m[f"{key}_step_s"]) * 1e6, derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -239,6 +264,7 @@ _TABLE_FOR = {
     "decode_longctx": decode_longctx_table,
     "telemetry_replay": telemetry_table,
     "traffic_scaling": traffic_scaling_table,
+    "sharded_decode": sharded_decode_table,
 }
 
 

@@ -387,3 +387,54 @@ def paged_attention_hbm(q, k_pages, v_pages, block_tables, context_lens, *,
         interpret=interpret,
     )(*operands)
     return _merge_partials(m, l, acc, q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the sharded (mesh) route
+# ---------------------------------------------------------------------------
+
+
+def paged_attention_sharded(q, k_pages, v_pages, block_tables, context_lens,
+                            mesh, *, scale=None, window=None, softcap=None,
+                            num_splits=1, hbm=False, interpret=False):
+    """Per-shard head slices of the paged kernel over a ``('data',
+    'model')`` mesh: query heads and KV heads split over ``'model'``,
+    batch rows over ``'data'``, block tables and context lengths
+    replicated per model shard.
+
+    Head cells of the ``(B, H[, num_splits])`` grid are independent (a
+    query head only ever reads its own KV-head group), so sharding is a
+    pure index-space split: each model shard runs the SAME kernel on its
+    local ``H/m`` query heads against its local ``KH/m`` KV-head slice
+    of every page — the GQA group size ``H/KH`` is invariant under the
+    split, and no cross-shard merge is needed (the split-KV log-sum-exp
+    merge stays shard-local).  Falls back to the unsharded call when the
+    mesh cannot divide heads/batch evenly (the ``sanitize_specs``
+    replication rule) or has no parallelism at all."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, H, D = q.shape
+    KH = k_pages.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    kern = paged_attention_hbm if hbm else paged_attention
+    call = functools.partial(kern, scale=scale, window=window,
+                             softcap=softcap, num_splits=num_splits,
+                             interpret=interpret)
+    d_sz, m_sz = mesh.shape["data"], mesh.shape["model"]
+    head_ok = m_sz == 1 or (H % m_sz == 0 and KH % m_sz == 0)
+    batch_ok = d_sz == 1 or B % d_sz == 0
+    if (d_sz * m_sz == 1) or not head_ok:
+        return call(q, k_pages, v_pages, block_tables, context_lens)
+    bax = "data" if (d_sz > 1 and batch_ok) else None
+    hax = "model" if m_sz > 1 else None
+    return shard_map(
+        call, mesh,
+        in_specs=(P(bax, hax, None),          # q: rows x head slice
+                  P(None, None, hax, None),   # pools: KV-head slice
+                  P(None, None, hax, None),
+                  P(bax, None),               # tables: replicated per shard
+                  P(bax,)),                   # context lengths
+        out_specs=P(bax, hax, None),
+        check_rep=False,
+    )(q, k_pages, v_pages, block_tables, context_lens)

@@ -13,8 +13,12 @@ gradient compression applies).
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,11 +27,63 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model_axis: int | None = None):
-    """A mesh over whatever devices exist (CPU smoke tests: 1 device)."""
-    n = len(jax.devices())
-    m = model_axis or 1
-    return jax.make_mesh((n // m, m), ("data", "model"))
+def _largest_divisor_leq(n: int, m: int) -> int:
+    for d in range(min(m, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def make_host_mesh(model_axis: int | None = None, *, devices=None,
+                   allow_shrink: bool = False):
+    """A ``('data', 'model')`` mesh over the host's devices (CPU smoke
+    tests: 1 device) or an explicit ``devices`` sub-slice (one serving
+    replica's share of a cluster budget).
+
+    ``model_axis`` must divide the device count: the old behaviour
+    silently computed ``(n // m, m)`` and DROPPED ``n % m`` devices
+    (or failed opaquely inside the mesh constructor).  Now a
+    non-divisible ``model_axis`` raises a clear error, unless the
+    caller opts into ``allow_shrink=True`` — then the model axis falls
+    back to the largest divisor of ``n`` at or under ``model_axis``,
+    with a logged warning, and no device is ever dropped."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    n = len(devs)
+    if n == 0:
+        raise ValueError("make_host_mesh needs at least one device")
+    m = 1 if model_axis is None else model_axis
+    if m < 1:
+        raise ValueError(f"model_axis must be >= 1, got {m}")
+    if n % m:
+        if not allow_shrink:
+            raise ValueError(
+                f"model_axis={m} does not divide the {n} available "
+                f"device(s); a ({n} // {m}, {m}) mesh would drop "
+                f"{n % m} device(s).  Pass a divisor of {n}, or "
+                f"allow_shrink=True to fall back to the largest "
+                f"divisor <= {m}")
+        fell_back = _largest_divisor_leq(n, m)
+        log.warning(
+            "make_host_mesh: model_axis=%d does not divide %d devices; "
+            "shrinking to model_axis=%d (allow_shrink)", m, n, fell_back)
+        m = fell_back
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs).reshape(n // m, m), ("data", "model"))
+
+
+def slice_devices(n_replicas: int, devices_per_replica: int, devices=None):
+    """Carve the device list into ``n_replicas`` disjoint sub-slices of
+    ``devices_per_replica`` each — the per-replica device budgets a
+    :class:`~repro.sharding.plans.ClusterTopology` implies.  Raises when
+    the budget exceeds the devices physically present."""
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = n_replicas * devices_per_replica
+    if need > len(devs):
+        raise ValueError(
+            f"{n_replicas} replica(s) x {devices_per_replica} device(s) "
+            f"= {need} exceeds the {len(devs)} device(s) present")
+    return [devs[i * devices_per_replica:(i + 1) * devices_per_replica]
+            for i in range(n_replicas)]
 
 
 def batch_axes(mesh) -> tuple:

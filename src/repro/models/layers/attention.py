@@ -310,6 +310,12 @@ def attention(p, x, *, cfg, positions, is_global, theta=None,
     # local/global pattern as data); the kernel needs a STATIC window, so
     # the pallas path applies when the window question is static: either
     # is_global is a python bool, or the config has no window at all.
+    # Under a ('data','model') serving mesh the jnp paged path partitions
+    # through GSPMD (pool KV heads over 'model' — see ``paged_pool_spec``);
+    # the explicit per-shard kernel route for TPU meshes is
+    # ``kernels.paged_attention.paged_attention_sharded`` (head cells of
+    # the (B,H,num_splits) grid are independent, so the shard_map split
+    # runs the same kernel on local head slices).
     static_global = isinstance(is_global, bool)
     use_paged_kernel = (
         block_tables is not None and cfg.use_pallas and Sq == 1
@@ -373,14 +379,34 @@ def init_kv_cache(cfg, batch, max_len, n_layers, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def paged_pool_spec(cfg, mesh=None):
+    """The paged pool's partition spec ``[L, n_blocks, bs, KH, hd]``: KV
+    heads over ``'model'`` (each model shard owns a head slice of EVERY
+    block, so block ids — and the host-side allocator / eviction /
+    compaction bookkeeping built on them — stay global), everything else
+    replicated.  Falls back to full replication when the mesh's model
+    axis cannot divide the KV heads evenly (``sanitize_specs`` rule)."""
+    if mesh is not None and mesh.shape.get("model", 1) > 1 \
+            and cfg.n_kv_heads % mesh.shape["model"] == 0:
+        return P(None, None, None, "model", None)
+    return P()
+
+
 def init_paged_kv_cache(cfg, n_blocks, block_size, n_layers,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, mesh=None):
     """The paged pool: ``n_blocks`` shared blocks of ``block_size`` token
     slots per layer — resident KV bytes scale with the pool, not with
-    ``max_batch x max_len``."""
+    ``max_batch x max_len``.  With a ``mesh``, the pool is laid out
+    sharded at birth (``paged_pool_spec``: KV heads over ``'model'``),
+    so a sharded replica never materializes the replicated pool."""
     kh, hd = cfg.n_kv_heads, cfg.head_dim
     shape = (n_layers, n_blocks, block_size, kh, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    pool = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        sh = NamedSharding(mesh, paged_pool_spec(cfg, mesh))
+        pool = jax.device_put(pool, {"k": sh, "v": sh})
+    return pool
 
 
 def kv_cache_specs(batch_axes=("data",), seq_axis="model"):

@@ -162,13 +162,17 @@ def init_decode_cache(cfg, batch, max_len):
     return c
 
 
-def init_paged_decode_cache(cfg, n_blocks, block_size):
+def init_paged_decode_cache(cfg, n_blocks, block_size, mesh=None):
     """The paged decode cache: one shared pool of KV blocks per layer.
 
     Only plain GQA-attention stacks page cleanly — recurrent families
     (ssm/rwkv/hybrid) carry per-slot state that is not positional, and
     meta tokens / modality prefixes are prepended by prefill-mode calls
-    the chunked path never makes — so everything else raises loudly."""
+    the chunked path never makes — so everything else raises loudly.
+
+    ``mesh``: lay the pool out sharded at birth (KV heads over the
+    mesh's ``'model'`` axis — ``attention.paged_pool_spec``) for a
+    replica that decodes over multiple chips."""
     if (cfg.attn_impl != "gqa" or cfg.family in ("ssm", "hybrid")
             or cfg.ssm is not None or cfg.rwkv is not None
             or cfg.meta_tokens or cfg.frontend is not None):
@@ -176,7 +180,7 @@ def init_paged_decode_cache(cfg, n_blocks, block_size):
             f"{cfg.name}: paged KV cache needs a plain GQA attention "
             "stack (no recurrent state, meta tokens, or prefix embeds)")
     return attn_mod.init_paged_kv_cache(cfg, n_blocks, block_size,
-                                        cfg.n_layers)
+                                        cfg.n_layers, mesh=mesh)
 
 
 def decode_cache_specs(cfg, batch_axes=("data",), seq_axis="model"):

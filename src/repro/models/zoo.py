@@ -70,7 +70,8 @@ class Model:
     input_specs: Callable
     input_shardings: Callable
     # paged serving (None where the family has no paged KV cache):
-    # init_paged_cache(n_blocks, block_size) -> pool; decode then takes
+    # init_paged_cache(n_blocks, block_size, mesh=None) -> pool (laid
+    # out sharded when a serving mesh is passed); decode then takes
     # an optional block_tables=[B,NB] arg routing K/V through the pool
     init_paged_cache: Optional[Callable] = None
     # the fused decode hot path: greedy sampling (argmax over the
@@ -130,8 +131,9 @@ def _build_lm(cfg: ModelCfg) -> Model:
     def init_cache(batch, max_len):
         return lm_mod.init_decode_cache(cfg, batch, max_len)
 
-    def init_paged_cache(n_blocks, block_size):
-        return lm_mod.init_paged_decode_cache(cfg, n_blocks, block_size)
+    def init_paged_cache(n_blocks, block_size, mesh=None):
+        return lm_mod.init_paged_decode_cache(cfg, n_blocks, block_size,
+                                              mesh=mesh)
 
     def cache_specs(batch_axes=("data",), seq_axis="model"):
         return lm_mod.decode_cache_specs(cfg, batch_axes, seq_axis)

@@ -56,6 +56,16 @@ class ServingCluster:
         ``telemetry`` may be a :class:`ClusterTelemetry` (one controller
         per replica) — a single TelemetryController cannot be shared,
         its ``bind`` refuses a second engine.
+
+        When the budget came with a topology whose replicas span more
+        than one chip (``plan.data x plan.model > 1``) and the process
+        actually HAS that many devices, each paged replica is
+        instantiated on its own device sub-slice
+        (``launch.mesh.slice_devices``) with the per-replica mesh built
+        from the ranked plan — the priced factorization becomes the
+        physical layout.  With fewer physical devices than the budget
+        (the analytic/simulation case: pricing an 8-chip cluster from a
+        1-chip host) replicas stay unsharded, exactly as before.
         """
         topology = None
         if n_replicas is None:
@@ -76,12 +86,27 @@ class ServingCluster:
         else:
             raise ValueError(f"unknown engine kind {engine!r} "
                              f"(want 'paged' or 'slot')")
+        meshes: List = [None] * n_replicas
+        if (engine == "paged" and topology is not None
+                and topology.devices_per_replica > 1
+                and "mesh" not in engine_kwargs):
+            import jax
+            from repro.launch.mesh import make_host_mesh, slice_devices
+            per = topology.devices_per_replica
+            if n_replicas * per <= len(jax.devices()):
+                meshes = [
+                    make_host_mesh(model_axis=topology.plan.model,
+                                   devices=devs)
+                    for devs in slice_devices(n_replicas, per)]
         replicas = []
         for i in range(n_replicas):
             controller = telemetry.controller(i) if telemetry else None
+            kw = dict(engine_kwargs)
+            if meshes[i] is not None:
+                kw["mesh"] = meshes[i]
             replicas.append(Engine(model, params, clock=clock,
                                    cost_model=cost_model,
-                                   telemetry=controller, **engine_kwargs))
+                                   telemetry=controller, **kw))
         return cls(replicas, policy=policy, shed_wait_s=shed_wait_s,
                    max_reroutes=max_reroutes, telemetry=telemetry,
                    topology=topology)

@@ -165,6 +165,22 @@ class Router:
         """Router-owned requests admitted but not yet collected."""
         return len(self._local)
 
+    def assert_drained(self) -> None:
+        """Invariant check for a fully-drained trace: every admitted
+        request was collected and every per-request bookkeeping dict
+        (``_local``, ``_origin`` and the ``_moves`` reroute counters —
+        all pruned by ``collect``) is empty.  A leftover entry means a
+        per-request leak: the dicts would grow without bound on a
+        long-running cluster.  Call after ``run_until_done`` /
+        a drained acceptance trace; raises AssertionError with the
+        leaked ids."""
+        leaks = {name: d for name, d in (("_local", self._local),
+                                         ("_origin", self._origin),
+                                         ("_moves", self._moves)) if d}
+        assert not leaks, (
+            "router bookkeeping leaked after drain: "
+            + "; ".join(f"{k}={sorted(v)!r}" for k, v in leaks.items()))
+
     def queue_depths(self) -> List[int]:
         return [len(eng.queue) for eng in self.replicas]
 

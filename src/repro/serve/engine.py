@@ -575,12 +575,46 @@ class PagedServingEngine(_TunedDispatch):
                  cost_model: Optional[CostModel] = None,
                  step_budget_s: Optional[float] = None,
                  autotuner=None, clock=None, compact_on_retire: bool = True,
-                 fused: bool = True, telemetry=None):
+                 fused: bool = True, telemetry=None, mesh=None):
         if model.init_paged_cache is None:
             raise NotImplementedError(
                 f"{model.cfg.name}: no paged KV cache for this architecture")
+        if mesh is not None and not fused:
+            raise ValueError("a sharded replica (mesh=...) requires the "
+                             "fused decode path (fused=True); the legacy "
+                             "blocking path is single-device by design")
         self.model = model
         self.params = params
+        # -- the sharded replica (mesh) ------------------------------------
+        # One replica spanning plan.data x plan.model chips: the paged KV
+        # pool is laid out with KV heads over 'model' and the [B] decode
+        # loop state with batch rows over 'data'
+        # (sharding.plans.paged_decode_shardings); block tables stay
+        # replicated, so the host-side allocator / eviction / compaction
+        # bookkeeping is identical to the single-device engine.  The fused
+        # step closures are jitted with explicit in/out shardings — GSPMD
+        # partitions the step, donation carries through unchanged (in ==
+        # out sharding for the pool), and the [2, B] io echo stays the only
+        # device->host sync — so the one-sync-per-step and donation
+        # invariants hold verbatim on a mesh.
+        self.mesh = mesh
+        self._shardings = None
+        self.sharding_log: List[str] = []
+        if mesh is not None:
+            from repro.sharding.plans import (named_tree,
+                                              paged_decode_shardings,
+                                              sanitize_specs, strip_axis)
+            self._shardings = paged_decode_shardings(
+                model.cfg, mesh, max_batch, self.sharding_log)
+            pshapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+            # params: TP over 'model' only — 'data' stays replicated
+            # (strip_axis documents why FSDP-split weights would break
+            # the byte-identical-tokens contract)
+            pspecs = sanitize_specs(strip_axis(model.param_specs()),
+                                    pshapes, mesh, self.sharding_log)
+            self._param_sh = named_tree(mesh, pspecs)
+            self.params = jax.device_put(params, self._param_sh)
         self.max_batch = max_batch
         self.max_len = max_len
         self.cost_model = cost_model
@@ -626,7 +660,11 @@ class PagedServingEngine(_TunedDispatch):
         self.scheduler = ChunkedPrefillScheduler(
             chunk_size, step_budget_s=step_budget_s)
         self.chunk_size = chunk_size
-        self.cache = model.init_paged_cache(n_blocks, block_size)
+        if mesh is not None:
+            self.cache = model.init_paged_cache(n_blocks, block_size,
+                                                mesh=mesh)
+        else:
+            self.cache = model.init_paged_cache(n_blocks, block_size)
         self.block_tables = np.full(
             (max_batch, self.max_blocks_per_seq), -1, np.int32)
         self._bt_dev = None             # cached device copy of block_tables
@@ -639,7 +677,7 @@ class PagedServingEngine(_TunedDispatch):
         self._pending = None
         step_fn = _decode_step_fn(model)
         if fused:
-            self._toks = jnp.zeros((max_batch,), jnp.int32)
+            self._toks = self._dev(np.zeros(max_batch, np.int32), "batch")
 
             def fused_decode(params, cache, toks, pos, bt):
                 nxt, cache = step_fn(params, cache, toks[:, None], pos, bt)
@@ -655,8 +693,30 @@ class PagedServingEngine(_TunedDispatch):
                 tok0 = jnp.where(final, nxt[0], toks_dev[idx])
                 return cache, toks_dev.at[idx].set(tok0)
 
-            self._decode = jax.jit(fused_decode, donate_argnums=(1,))
-            self._chunk = jax.jit(fused_chunk, donate_argnums=(1, 5))
+            if mesh is None:
+                self._decode = jax.jit(fused_decode, donate_argnums=(1,))
+                self._chunk = jax.jit(fused_chunk, donate_argnums=(1, 5))
+            else:
+                # explicit in/out shardings: GSPMD partitions the step, and
+                # — critically — they survive ``.lower().compile()``, so the
+                # AOT executable ``_predict_decode`` swaps in keeps the
+                # exact same layout contract as the jitted path.  The pool
+                # keeps one sharding on both sides of the step, so donation
+                # is an in-place per-shard update, never a reshard.
+                sh = self._shardings
+                pool_sh = jax.tree.map(lambda _: sh["pool"], self.cache)
+                self._pool_sh = pool_sh
+                self._decode = jax.jit(
+                    fused_decode, donate_argnums=(1,),
+                    in_shardings=(self._param_sh, pool_sh, sh["batch"],
+                                  sh["batch"], sh["repl"]),
+                    out_shardings=(sh["io"], sh["batch"], pool_sh))
+                self._chunk = jax.jit(
+                    fused_chunk, donate_argnums=(1, 5),
+                    in_shardings=(self._param_sh, pool_sh, sh["repl"],
+                                  sh["repl"], sh["repl"], sh["batch"],
+                                  sh["repl"], sh["repl"]),
+                    out_shardings=(pool_sh, sh["batch"]))
         else:
             self._decode = jax.jit(model.decode)     # batch decode [B, 1]
             self._chunk = jax.jit(model.decode)      # chunk prefill [1, C]
@@ -750,12 +810,26 @@ class PagedServingEngine(_TunedDispatch):
             return True
         return row.dispatched >= max(row.req.max_new_tokens - 1, 1)
 
+    def _dev(self, x, kind: str = "repl"):
+        """THE host->device boundary for per-step operands.  Unsharded:
+        a plain uncommitted upload (``jnp.asarray``), exactly the old
+        behavior.  Sharded: an explicit ``jax.device_put`` onto the
+        replica mesh with the named sharding — required because the AOT
+        decode executable (``_predict_decode``) checks operand shardings
+        instead of auto-resharding, and because an uncommitted
+        single-device array would not even live on the mesh's device
+        set."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(np.asarray(x), self._shardings[kind])
+
     def _bt_device(self):
         """The device block tables, uploaded only when a table row
         actually mutated (growth, eviction, retire, compaction) instead
-        of fresh per step."""
+        of fresh per step.  Replicated on a mesh: every shard reads the
+        whole table to translate logical slots to physical blocks."""
         if self._bt_dev is None:
-            self._bt_dev = jnp.asarray(self.block_tables)
+            self._bt_dev = self._dev(self.block_tables)
             self.stats.table_uploads += 1
         return self._bt_dev
 
@@ -835,10 +909,16 @@ class PagedServingEngine(_TunedDispatch):
         if plan is None:
             return
         src, dst = plan
-        s = jnp.asarray(src, jnp.int32)
-        d = jnp.asarray(dst, jnp.int32)
+        s = self._dev(np.asarray(src, np.int32))
+        d = self._dev(np.asarray(dst, np.int32))
         self.cache = jax.tree.map(
             lambda c: c.at[:, d].set(c[:, s]), self.cache)
+        if self.mesh is not None:
+            # the block axis (1) is unsharded, so the copy is shard-local;
+            # re-pin the result in case eager sharding propagation picked
+            # a different layout — the AOT decode executable checks
+            # operand shardings instead of auto-resharding
+            self.cache = jax.device_put(self.cache, self._pool_sh)
         for i in self._placed():
             self.block_tables[i] = remap_table(
                 list(self.block_tables[i]), src, dst)
@@ -886,9 +966,9 @@ class PagedServingEngine(_TunedDispatch):
         bt = self._bt_device()[idx:idx + 1]
         if self.fused:
             self.cache, self._toks = self._chunk(
-                self.params, self.cache, jnp.asarray(toks[None]),
-                jnp.asarray([start], jnp.int32), bt, self._toks,
-                jnp.asarray(idx, jnp.int32), jnp.asarray(end == S))
+                self.params, self.cache, self._dev(toks[None]),
+                self._dev(np.asarray([start], np.int32)), bt, self._toks,
+                self._dev(np.int32(idx)), self._dev(end == S))
         else:
             logits, self.cache = self._chunk(
                 self.params, self.cache, jnp.asarray(toks[None]),
@@ -1034,8 +1114,8 @@ class PagedServingEngine(_TunedDispatch):
             pos[i] = row.pos
         if self.fused:
             io, self._toks, self.cache = self._decode(
-                self.params, self.cache, self._toks, jnp.asarray(pos),
-                self._bt_device())
+                self.params, self.cache, self._toks,
+                self._dev(pos, "batch"), self._bt_device())
             # the snapshot carries each row's post-step position: that is
             # the value retire checks compare against at drain time
             # (row.pos itself may advance again before the drain)

@@ -116,16 +116,95 @@ def candidate_mesh_shapes(n_devices: int,
     widths that cannot shard BOTH the Q and KV head dims evenly
     (approximating the per-dim divisibility rule ``sanitize_specs``
     enforces — an uneven model axis replicates those projections at
-    mesh-build time, so the analytic census would overprice its benefit)."""
+    mesh-build time, so the analytic census would overprice its benefit).
+
+    The head filter only applies to attention archs: headless configs
+    (attn_impl='none' — RWKV/Mamba-style state archs — or duck-typed
+    cfgs without head fields at all) have no head dim to shard, so every
+    factorization stays a candidate instead of crashing on a missing or
+    meaningless attribute."""
+    n_heads = getattr(cfg, "n_heads", None)
+    n_kv = getattr(cfg, "n_kv_heads", None) or 0
+    headless = (cfg is None or not n_heads
+                or getattr(cfg, "attn_impl", "gqa") in (None, "none"))
     shapes = []
     for m in range(1, n_devices + 1):
         if n_devices % m:
             continue
-        if cfg is not None and m > 1 \
-                and (cfg.n_heads % m or cfg.n_kv_heads % m):
+        if not headless and m > 1 and (n_heads % m or n_kv % m):
             continue
         shapes.append((n_devices // m, m))
     return shapes or [(n_devices, 1)]
+
+
+def strip_axis(specs, axis: str = "data"):
+    """Drop one mesh axis from every PartitionSpec in a tree (the dims it
+    sharded become replicated).
+
+    Serving replicas use this on ``model.param_specs()``: those specs
+    carry the TRAINING layout, where 'data' is the FSDP axis sharding
+    weights across the batch dimension of the mesh.  A decode step wants
+    weights REPLICATED across 'data' (every batch shard multiplies the
+    whole matrix — the classic inference TP layout) — and not only for
+    speed: an FSDP-split gemm accumulates partial sums in a different
+    order, so its bf16 rounding can diverge from the single-device
+    engine's and break the sharded replica's byte-identical-tokens
+    contract on argmax ties."""
+    def fix(spec):
+        new = []
+        for e in tuple(spec):
+            if e == axis:
+                new.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a != axis)
+                new.append(kept if kept else None)
+            else:
+                new.append(e)
+        while new and new[-1] is None:
+            new.pop()
+        return P(*new)
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def paged_decode_shardings(cfg, mesh: Mesh, max_batch: int,
+                           log: List[str] | None = None):
+    """The concrete :class:`NamedSharding` set for one sharded paged
+    replica's fused decode step (``serve.engine.PagedServingEngine``):
+
+    * ``pool``  — the paged KV pool ``[L, n_blocks, bs, KH, hd]`` with
+      the KV-head dim over ``'model'`` (each model shard owns a head
+      slice of every block; block ids stay global, so the host-side
+      allocator/eviction/compaction bookkeeping is sharding-agnostic);
+    * ``batch`` — ``[B]`` decode loop state (tokens, write positions)
+      over ``'data'``;
+    * ``io``    — the ``[2, B]`` input-echo + output stack, batch dim
+      over ``'data'``;
+    * ``repl``  — replicated (block tables: every shard reads the whole
+      table to translate logical slots to physical blocks).
+
+    Dims that the mesh cannot divide evenly fall back to replication,
+    logged — the same rule (and reason) as ``sanitize_specs``."""
+    m_sz, d_sz = mesh.shape["model"], mesh.shape["data"]
+    kv = getattr(cfg, "n_kv_heads", 0) or 0
+    if m_sz > 1 and kv % m_sz == 0:
+        pool = P(None, None, None, "model", None)
+    else:
+        if m_sz > 1 and log is not None:
+            log.append(f"replicated KV pool: {kv} kv heads not divisible "
+                       f"by model={m_sz}")
+        pool = P()
+    if d_sz > 1 and max_batch % d_sz == 0:
+        batch = P("data")
+        io = P(None, "data")
+    else:
+        if d_sz > 1 and log is not None:
+            log.append(f"replicated batch state: max_batch={max_batch} "
+                       f"not divisible by data={d_sz}")
+        batch = P()
+        io = P()
+    sh = lambda spec: NamedSharding(mesh, spec)
+    return {"pool": sh(pool), "batch": sh(batch), "io": sh(io),
+            "repl": sh(P())}
 
 
 def rank_plans(cfg, cell, n_devices: int,

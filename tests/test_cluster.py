@@ -251,6 +251,20 @@ def test_reroute_cap_limits_ping_pong():
     assert len(cl.done) == len(tight_trace())
 
 
+def test_router_bookkeeping_drains_and_leaks_are_loud():
+    # regression for the drain-audit sweep: after every admitted request
+    # finishes, the rid maps and the in-flight move set must be EMPTY —
+    # and a leaked entry must fail the assert with the dict named
+    cl, clock = build_cluster(2, policy="cost_aware", max_len=48,
+                              n_blocks=8)
+    run_trace(cl, clock, tight_trace())
+    assert cl.stats.reroutes > 0     # the trace must exercise _moves
+    cl.router.assert_drained()
+    cl.router._moves[999] = 0
+    with pytest.raises(AssertionError, match="_moves"):
+        cl.router.assert_drained()
+
+
 def test_predicted_queue_seconds_empty_and_loaded():
     cl, _ = build_cluster(1)
     eng = cl.replicas[0]
@@ -334,7 +348,7 @@ def test_sharding_cli_rejects_bad_topology():
 # ---------------------------------------------------------------------------
 
 
-def test_bench_v4_validate_and_compare_scenarios(tmp_path):
+def test_bench_v5_validate_and_compare_scenarios(tmp_path):
     import importlib.util
     import json
     import sys
@@ -347,26 +361,66 @@ def test_bench_v4_validate_and_compare_scenarios(tmp_path):
         spec.loader.exec_module(mod)
     bench, comp = sys.modules["bench_serve"], sys.modules["traj_compare"]
 
-    assert bench.SCHEMA == "bench_serve/v4" and bench.BENCH_ID == 8
-    doc = {"schema": bench.SCHEMA, "bench_id": 8, "engines": {},
+    assert bench.SCHEMA == "bench_serve/v5" and bench.BENCH_ID == 9
+    doc = {"schema": bench.SCHEMA, "bench_id": 9, "engines": {},
            "cluster": {"r1": {"rr_tok_per_s": 10.0, "ca_tok_per_s": 11.0},
-                       "r2": {"rr_tok_per_s": 17.0, "ca_tok_per_s": 20.0}}}
-    path = tmp_path / "BENCH_8.json"
+                       "r2": {"rr_tok_per_s": 17.0, "ca_tok_per_s": 20.0}},
+           "sharded": {"ref_step_s": 0.5, "d1m1_step_s": 0.5,
+                       "d1m1_pred_step_s": 1e-6, "d2m2_step_s": 0.25}}
+    path = tmp_path / "BENCH_9.json"
     path.write_text(json.dumps(doc))
     loaded = bench.validate_bench_doc(json.loads(path.read_text()))
     assert loaded == doc                                 # round-trip
     s = comp.scenarios(loaded)
     assert s["cluster.r1.rr"] == 10.0 and s["cluster.r2.ca"] == 20.0
-    # older schemas still validate (no cluster block required pre-v4)
+    # sharded step times gate as inverted rates; predictions are
+    # diagnostics, not gated scenarios
+    assert s["sharded.d1m1.steps_per_s"] == 2.0
+    assert s["sharded.d2m2.steps_per_s"] == 4.0
+    assert s["sharded.ref.steps_per_s"] == 2.0
+    assert not any("pred" in k for k in s)
+    # older schemas still validate (blocks only required from their
+    # introducing version on)
     bench.validate_bench_doc({"schema": "bench_serve/v3", "engines": {}})
+    bench.validate_bench_doc({"schema": "bench_serve/v4", "engines": {},
+                              "cluster": {}})
     with pytest.raises(ValueError):
         bench.validate_bench_doc({"schema": "bench_serve/v4",
                                   "engines": {}})        # missing cluster
     with pytest.raises(ValueError):
+        bench.validate_bench_doc({"schema": "bench_serve/v5",
+                                  "engines": {},
+                                  "cluster": {}})        # missing sharded
+    with pytest.raises(ValueError):
         bench.validate_bench_doc({"schema": "bench_serve/v99",
-                                  "engines": {}, "cluster": {}})
+                                  "engines": {}, "cluster": {},
+                                  "sharded": {}})
     with pytest.raises(ValueError):
         bench.validate_bench_doc({"schema": "autotune.cache/v1"})
+
+
+def test_committed_trajectory_carries_bench9_sharded():
+    import importlib.util
+    import sys
+    root = __import__("pathlib").Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "traj_compare3", root / "benchmarks/trajectory/compare.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["traj_compare3"] = mod
+    spec.loader.exec_module(mod)
+    traj = mod.load_trajectory(root / "benchmarks/trajectory")
+    ids = [i for i, _ in traj]
+    assert 9 in ids, "BENCH_9.json must be committed with this change"
+    doc = dict(traj)[9]
+    assert doc["schema"] == "bench_serve/v5"
+    assert doc["sharded_ok"] and doc["identical_tokens"]
+    sh = doc["sharded"]
+    assert sh["identical_all"]
+    for d, m in ((1, 1), (2, 1), (1, 2), (2, 2)):
+        assert sh[f"d{d}m{m}_identical"], (d, m)
+        assert sh[f"d{d}m{m}_sync_ok"] and sh[f"d{d}m{m}_donated"], (d, m)
+        assert sh[f"d{d}m{m}_pred_step_s"] > 0, (d, m)
+    assert mod.compare(traj, tolerance=0.6) == []
 
 
 def test_committed_trajectory_carries_bench8_cluster():

@@ -1,0 +1,223 @@
+"""Sharded intra-replica decode: the tentpole acceptance contract plus
+the mesh/plan bugfix sweep that rides along.
+
+The headline: a paged replica spanning ``plan.model_parallel`` chips
+(KV heads over 'model', batch rows over 'data', block tables
+replicated) must be a pure LAYOUT change — greedy tokens byte-identical
+to the single-device engine on the 32-request acceptance trace, with
+the fused path's <= 1-host-sync and donated-pool invariants intact, and
+eviction + compaction actually exercised while it runs.  CPU hosts own
+one device, so the canonical check re-enters ``repro.serve.
+sharded_check`` in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (one run,
+module-scoped; ~20 s).
+
+The sweep: ``make_host_mesh`` divisibility validation + allow_shrink,
+``slice_devices`` replica budgeting, ``candidate_mesh_shapes`` on
+headless/duck-typed archs (the ``python -m repro.sharding`` CLI crash),
+``strip_axis`` (serving keeps weights replicated over 'data' — the
+byte-identity fix), and ``paged_decode_shardings``'s replication
+fallbacks.
+"""
+import logging
+
+import pytest
+
+from repro.launch.mesh import make_host_mesh, slice_devices
+from repro.serve.sharded_check import parse_shapes, run_subprocess
+from repro.sharding.plans import candidate_mesh_shapes, strip_axis
+
+SHAPES = [(1, 1), (2, 1), (1, 2), (2, 2)]
+
+
+@pytest.fixture(scope="module")
+def check_doc():
+    """THE canonical acceptance run: 4 factorizations x 32 requests on a
+    forced-8-device CPU host (single subprocess, shared by the tests)."""
+    return run_subprocess(SHAPES, devices=8, n_req=32)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: byte-identical tokens + fused-path invariants per mesh shape
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES,
+                         ids=[f"d{d}m{m}" for d, m in SHAPES])
+def test_sharded_replica_byte_identical_with_invariants(check_doc, shape):
+    d, m = shape
+    entry = next(e for e in check_doc["shapes"]
+                 if (e["data"], e["model"]) == (d, m))
+    assert "skipped" not in entry, entry
+    assert entry["identical"], \
+        f"(data={d}, model={m}) diverged from the single-device engine"
+    assert entry["sync_per_step_ok"], entry
+    assert entry["donated"], "fused pool donation broke under sharding"
+    # layout never changes scheduling: same step count as the reference
+    assert entry["steps"] == check_doc["reference"]["steps"]
+
+
+def test_top_ranked_plan_is_model_parallel_and_identical(check_doc):
+    """THE acceptance criterion: the replica built from
+    ``rank_plans(...)[0]`` — which must want model parallelism on this
+    cell — reproduces the single-device engine byte-for-byte."""
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import ShapeCell
+    from repro.serve.sharded_check import ENGINE_KW
+    from repro.sharding.plans import rank_plans
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    cell = ShapeCell("sharded", "decode", ENGINE_KW["max_len"],
+                     ENGINE_KW["max_batch"])
+    best = rank_plans(cfg, cell, 4)[0]
+    assert best.model >= 2
+    entry = next((e for e in check_doc["shapes"]
+                  if (e["data"], e["model"]) == best.mesh_shape), None)
+    assert entry is not None, \
+        f"top plan {best.mesh_shape} not in the checked SHAPES — extend them"
+    assert entry["identical"] and entry["ok"]
+
+
+def test_acceptance_trace_exercises_eviction_and_compaction(check_doc):
+    """Token equality is only meaningful if the hard paths ran: the tight
+    pool (10 blocks x 8) must preempt and compact under the 32-request
+    trace, identically on every shape."""
+    for e in check_doc["shapes"]:
+        assert e["preemptions"] > 0, e
+        assert e["compactions"] > 0, e
+
+
+def test_cost_model_prices_every_factorization(check_doc):
+    for e in check_doc["shapes"]:
+        assert e["predicted_step_s"] is not None and e["predicted_step_s"] > 0
+
+
+def test_sharded_paged_attention_kernel_matches_unsharded(check_doc):
+    """``paged_attention_sharded``'s shard_map head/batch split on a
+    (2, 2) mesh vs the plain kernel (run inside the 8-device child)."""
+    assert check_doc["kernel_sharded_ok"] is True
+
+
+def test_uneven_heads_fall_back_to_replication_and_stay_identical():
+    """model=3 cannot divide the reduced arch's KV heads: the shardings
+    must fall back to replication (logged), not crash or diverge."""
+    doc = run_subprocess([(1, 3)], devices=4, n_req=6)
+    entry = doc["shapes"][0]
+    assert entry["identical"] and entry["ok"]
+    assert any("replicated KV pool" in line
+               for line in entry["sharding_log"])
+
+
+# ---------------------------------------------------------------------------
+# make_host_mesh / slice_devices (satellite: divisibility validation)
+# ---------------------------------------------------------------------------
+
+
+def test_make_host_mesh_defaults_to_all_devices_model_1():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["model"] == 1
+
+
+def test_make_host_mesh_rejects_non_divisible_model_axis():
+    # 8 % 3 != 0: the old code silently built a (2, 3) mesh and DROPPED
+    # two devices — now it must refuse with an actionable message
+    with pytest.raises(ValueError, match="does not divide"):
+        make_host_mesh(model_axis=3, devices=list(range(8)))
+
+
+def test_make_host_mesh_allow_shrink_falls_back_to_divisor(caplog):
+    import jax
+    dev = jax.devices()[0]
+    with caplog.at_level(logging.WARNING, logger="repro.launch.mesh"):
+        mesh = make_host_mesh(model_axis=5, devices=[dev],
+                              allow_shrink=True)
+    assert mesh.shape == {"data": 1, "model": 1}
+    assert any("shrinking" in r.message for r in caplog.records)
+
+
+def test_make_host_mesh_rejects_degenerate_inputs():
+    with pytest.raises(ValueError, match="at least one device"):
+        make_host_mesh(devices=[])
+    with pytest.raises(ValueError, match=">= 1"):
+        make_host_mesh(model_axis=0, devices=list(range(4)))
+
+
+def test_slice_devices_carves_disjoint_replica_budgets():
+    devs = list(range(8))
+    slices = slice_devices(2, 4, devices=devs)
+    assert slices == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    with pytest.raises(ValueError, match="exceeds"):
+        slice_devices(3, 4, devices=devs)
+
+
+# ---------------------------------------------------------------------------
+# candidate_mesh_shapes + CLI (satellite: headless archs must not crash)
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_mesh_shapes_prunes_uneven_heads_for_attention():
+    from repro.configs import ARCHS, reduced
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    shapes = candidate_mesh_shapes(8, cfg)
+    assert all(d * m == 8 for d, m in shapes)
+    for _, m in shapes:
+        if m > 1:
+            assert cfg.n_heads % m == 0 and cfg.n_kv_heads % m == 0
+
+
+@pytest.mark.parametrize("cfg", [
+    None,
+    type("Duck", (), {})(),                 # no head fields at all
+], ids=["none", "duck"])
+def test_candidate_mesh_shapes_headless_keeps_all_factorizations(cfg):
+    assert candidate_mesh_shapes(8, cfg) == [(8, 1), (4, 2), (2, 4), (1, 8)]
+
+
+def test_candidate_mesh_shapes_rwkv_is_headless():
+    from repro.configs import ARCHS
+    cfg = ARCHS["rwkv6-1.6b"]               # attn_impl='none', n_kv_heads=0
+    assert candidate_mesh_shapes(8, cfg) == [(8, 1), (4, 2), (2, 4), (1, 8)]
+
+
+def test_sharding_cli_handles_headless_arch(capsys):
+    # regression: ranking a state-space arch used to trip over the head
+    # divisibility filter; the full table must come back for rwkv
+    from repro.sharding.cli import main
+    rc = main(["--arch", "rwkv6-1.6b", "--devices", "8",
+               "--topology", "4,32,128"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "<- best" in out and "replicas=" in out
+
+
+# ---------------------------------------------------------------------------
+# strip_axis + paged_decode_shardings (serving param/pool layouts)
+# ---------------------------------------------------------------------------
+
+
+def test_strip_axis_removes_fsdp_axis_everywhere():
+    from jax.sharding import PartitionSpec as P
+    specs = {"wq": P("data", "model", None),
+             "wo": P(("data", "model"),),
+             "norm": P("data"),
+             "bias": P(None, "model")}
+    out = strip_axis(specs, "data")
+    assert out["wq"] == P(None, "model")
+    assert out["wo"] == P(("model",))
+    assert out["norm"] == P()               # trailing Nones trimmed
+    assert out["bias"] == P(None, "model")  # untouched
+
+
+def test_paged_decode_shardings_single_device_replicates():
+    from repro.configs import ARCHS, reduced
+    from repro.sharding.plans import paged_decode_shardings
+    cfg = reduced(ARCHS["gemma2-2b"], n_layers=2, vocab_size=128)
+    mesh = make_host_mesh()                 # (1, 1): nothing to shard
+    log = []
+    sh = paged_decode_shardings(cfg, mesh, max_batch=4, log=log)
+    assert set(sh) == {"pool", "batch", "io", "repl"}
+    assert log == []                        # fallbacks only log when real
+
+
+def test_parse_shapes_round_trip():
+    assert parse_shapes("1x1,2x1,4x2") == [(1, 1), (2, 1), (4, 2)]
