@@ -32,13 +32,19 @@ conservation, and the cost-model-chosen topology.  The ``sharded``
 block (schema v5) records the sharded intra-replica decode scenario on
 a forced multi-device CPU host: per (data, model) factorization, token
 byte-identity vs the single-device engine, the one-sync and donation
-invariants, and measured vs cost-model-predicted step time.  CI runs
+invariants, and measured vs cost-model-predicted step time.  The
+``chaos`` block (schema v6) records one recovery drill per fault kind
+(crash, hang, corrupt, crash-loop) on a 2-replica SimClock cluster:
+detection-to-rejoin latency, requests recovered/abandoned, and the
+recovery invariants (byte-identical survivors, ``tokens_lost=0``,
+``blocks_leaked=0``, quarantine on crash-loop).  CI runs
 ``--quick`` and fails (rc=1) when any engine's ``identical_tokens`` is
 False, when the drift scenario does not recalibrate back under the
 gate, when the token bucket misses its SLO, when the tuned split stops
 beating the unsplit kernel (``longctx_ok``), when the cluster loses
-tokens / single-replica byte-identity (``cluster_ok``), or when any
-sharded replica's tokens diverge (``sharded_ok``).
+tokens / single-replica byte-identity (``cluster_ok``), when any
+sharded replica's tokens diverge (``sharded_ok``), or when any chaos
+drill breaks a recovery invariant (``chaos_ok``).
 ``benchmarks/trajectory/compare.py`` then gates tok/s against the
 previous committed snapshot.
 """
@@ -54,8 +60,8 @@ try:
 except ImportError:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-SCHEMA = "bench_serve/v5"
-BENCH_ID = 9          # the PR index this snapshot records
+SCHEMA = "bench_serve/v6"
+BENCH_ID = 10         # the PR index this snapshot records
 
 
 def validate_bench_doc(doc: dict) -> dict:
@@ -73,7 +79,8 @@ def validate_bench_doc(doc: dict) -> dict:
             f"bench_serve schema v{version} is newer than supported "
             f"{SCHEMA!r}; upgrade the repo to read this file")
     blocks = ("engines",) + (("cluster",) if version >= 4 else ()) \
-        + (("sharded",) if version >= 5 else ())
+        + (("sharded",) if version >= 5 else ()) \
+        + (("chaos",) if version >= 6 else ())
     for block in blocks:
         if block not in doc:
             raise ValueError(f"bench_serve document is missing its "
@@ -132,6 +139,17 @@ def run(quick: bool) -> dict:
     doc["sharded"] = run_sharded_decode_cell(
         {"shapes": "1x1,2x1,1x2,2x2"}, quick=quick)
     doc["sharded_ok"] = bool(doc["sharded"]["identical_all"])
+    # chaos drills (v6): every fault kind injected into a 2-replica
+    # cluster under SimClock must recover crash-consistently — fault-
+    # untouched requests byte-identical to the fault-free twin, zero
+    # lost tokens, zero leaked blocks, drained router, and the crash-
+    # looping replica quarantined by the restart budget
+    from repro.core.campaign.registry import run_chaos_serving_cell
+    doc["chaos"] = {}
+    for fault in ("crash", "hang", "corrupt", "crashloop"):
+        doc["chaos"][fault] = run_chaos_serving_cell(
+            {"fault": fault, "replicas": 2}, quick=quick)
+    doc["chaos_ok"] = bool(all(m["ok"] for m in doc["chaos"].values()))
     doc["identical_tokens"] = bool(
         all(m["identical_tokens"] for m in doc["engines"].values())
         and lc["identical_tokens"])
@@ -195,10 +213,17 @@ def main(argv=None) -> int:
               f"identical_tokens={sh[f'{key}_identical']} "
               f"sync_ok={sh[f'{key}_sync_ok']} "
               f"donated={sh[f'{key}_donated']}")
+    for fault, m in doc["chaos"].items():
+        print(f"chaos/{fault}: failures={m['failures']} "
+              f"recovery_s={m['recovery_latency_s']:.2f} "
+              f"survivors_identical={m['survivors_identical']} "
+              f"tokens_lost={m['tokens_lost']} "
+              f"blocks_leaked={m['blocks_leaked']} "
+              f"quarantined={m['quarantined']} ok={m['ok']}")
     print(f"wrote {out}")
     return 0 if (doc["identical_tokens"] and doc["telemetry_ok"]
                  and doc["longctx_ok"] and doc["cluster_ok"]
-                 and doc["sharded_ok"]) else 1
+                 and doc["sharded_ok"] and doc["chaos_ok"]) else 1
 
 
 if __name__ == "__main__":

@@ -30,6 +30,11 @@ arXiv:2208.11174) onto this backend's measurement primitives:
                                replica count through the cluster router,
                                round-robin vs cost-aware placement
                                (tok/s, p50/p99, shed rate, conservation)
+  * ``chaos_serving``        - the cluster under injected faults: crash /
+                               hang / corrupt / crash-loop x replica
+                               count, gating byte-identical survivors,
+                               zero lost tokens, zero leaked blocks and
+                               restart-budget quarantine
 
 Cell runners take ``(params, quick=...)`` and return a flat-ish metrics
 dict; the scheduler in ``runner.py`` owns ordering, persistence and resume.
@@ -882,6 +887,50 @@ register(Experiment(
     runner=run_sharded_decode_cell,
     cost_per_cell_s=300.0,
     tags=("serve", "sharding", "costmodel"),
+))
+
+
+def run_chaos_serving_cell(params: Dict[str, Any], quick: bool = False
+                           ) -> Dict[str, Any]:
+    """One chaos drill: a seeded fault of ``params['fault']`` injected
+    into a ``params['replicas']``-wide paged cluster under SimClock,
+    with detection (heartbeats / straggler ceiling / integrity probe),
+    router-level request recovery and restart-budget rejoin — then the
+    recovery invariants checked against a fault-free twin of the same
+    trace (see ``repro.serve.chaos.drill``).  ``ok`` summarizes the
+    cell's gate: identical survivors, all requests accounted, zero lost
+    tokens, zero leaked blocks, at least one fault actually detected —
+    and, for ``crashloop``, the breaker quarantining the flapper."""
+    from repro.serve.chaos.drill import run_chaos_drill
+    fault = str(params["fault"])
+    replicas = int(params["replicas"])
+    out = run_chaos_drill(fault, replicas,
+                          n_requests=8 if quick else 12)
+    ok = (out["survivors_identical"] and out["all_accounted"]
+          and out["tokens_lost"] == 0 and out["blocks_leaked"] == 0
+          and out["failures"] >= 1)
+    if fault == "crashloop":
+        ok = ok and out["quarantined"]
+    out["ok"] = bool(ok)
+    return out
+
+
+register(Experiment(
+    name="chaos_serving",
+    description="deterministic fault drills on the serving cluster: "
+                "crash / hang / corrupt / crash-loop x replica count "
+                "under SimClock — heartbeat+straggler+integrity "
+                "detection, router request recovery with retry budget, "
+                "brownout admission, restart-budget quarantine; gates "
+                "byte-identical survivors, zero lost tokens, zero "
+                "leaked blocks, drained router",
+    grid={"fault": ("crash", "hang", "corrupt", "crashloop"),
+          "replicas": (2, 3)},
+    quick_grid={"fault": ("crash", "hang", "corrupt", "crashloop"),
+                "replicas": (2,)},
+    runner=run_chaos_serving_cell,
+    cost_per_cell_s=30.0,
+    tags=("serve", "cluster", "chaos"),
 ))
 
 

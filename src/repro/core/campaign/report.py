@@ -252,6 +252,29 @@ def sharded_decode_table(doc: Mapping[str, Any]) -> List[Row]:
     return rows
 
 
+def chaos_serving_table(doc: Mapping[str, Any]) -> List[Row]:
+    """Chaos-drill evidence from a ``chaos_serving`` result file: one
+    row per (fault, replicas) cell with the recovery-invariant columns
+    CI greps (byte-identical survivors, lost tokens, leaked blocks) and
+    the detection/recovery trace (failures seen, requests recovered or
+    abandoned, worst detection-to-rejoin latency, quarantine verdict)."""
+    rows: List[Row] = []
+    for _, p, m in _cells(doc):
+        name = f"chaos_serving/{m['fault']}_r{m['replicas']}"
+        derived = (f"failures={m['failures']};"
+                   f"kinds={m['failure_kinds']};"
+                   f"recovered={m['recovered']};"
+                   f"abandoned={m['abandoned']};"
+                   f"recovery_s={m['recovery_latency_s']:.2f};"
+                   f"survivors_identical={m['survivors_identical']};"
+                   f"tokens_lost={m['tokens_lost']};"
+                   f"blocks_leaked={m['blocks_leaked']};"
+                   f"quarantined={m['quarantined']};"
+                   f"ok={m['ok']}")
+        rows.append((name, float(m["recovery_latency_s"]), derived))
+    return rows
+
+
 _TABLE_FOR = {
     "alu_chain": cpi_table,
     "mxu_shapes": mxu_table,
@@ -265,6 +288,7 @@ _TABLE_FOR = {
     "telemetry_replay": telemetry_table,
     "traffic_scaling": traffic_scaling_table,
     "sharded_decode": sharded_decode_table,
+    "chaos_serving": chaos_serving_table,
 }
 
 

@@ -36,12 +36,39 @@ class HostState:
 
 
 class HeartbeatRegistry:
-    def __init__(self, hosts: List[str], *, interval_s: float = 10.0,
+    """Membership is dynamic: the constructor list is a convenience for
+    a fixed fleet, while :meth:`register`/:meth:`deregister` admit and
+    remove hosts at runtime — a restarted replica rejoins under a fresh
+    host id (its EWMA history died with the old process), and a declared-
+    dead host is deregistered so it stops skewing the straggler median.
+    ``beat`` for an unregistered host stays a loud ``KeyError``:
+    membership changes are an explicit supervisor action, never a side
+    effect of a stray heartbeat."""
+
+    def __init__(self, hosts: Optional[List[str]] = None, *,
+                 interval_s: float = 10.0,
                  miss_limit: int = 3, ewma_alpha: float = 0.2):
-        self.hosts: Dict[str, HostState] = {h: HostState(h) for h in hosts}
+        self.hosts: Dict[str, HostState] = {h: HostState(h)
+                                            for h in (hosts or ())}
         self.interval_s = interval_s
         self.miss_limit = miss_limit
         self.alpha = ewma_alpha
+
+    # -- membership ----------------------------------------------------------
+    def register(self, host_id: str,
+                 now: Optional[float] = None) -> HostState:
+        """Admit a host (idempotent reset if already present): fresh
+        state, first heartbeat stamped now — a just-joined host must not
+        be instantly dead because its ``last_heartbeat`` is 0."""
+        st = HostState(host_id)
+        st.last_heartbeat = time.time() if now is None else now
+        self.hosts[host_id] = st
+        return st
+
+    def deregister(self, host_id: str) -> None:
+        """Remove a host from membership (no-op if absent).  Its beats
+        raise ``KeyError`` until it registers again."""
+        self.hosts.pop(host_id, None)
 
     def beat(self, host_id: str, step_time_s: Optional[float] = None,
              now: Optional[float] = None):
@@ -72,16 +99,26 @@ class HeartbeatRegistry:
         return [h for h, st in self.hosts.items() if st.alive]
 
     # -- straggler detection -------------------------------------------------
-    def stragglers(self, z_threshold: float = 4.0) -> List[str]:
+    def stragglers(self, z_threshold: float = 4.0,
+                   abs_limit_s: Optional[float] = None) -> List[str]:
+        """Hosts whose step-time EWMA is an outlier.  The MAD criterion
+        needs >= 3 live hosts (a median of two cannot vote); ``abs_limit_s``
+        adds an absolute ceiling that works at any fleet size — a
+        two-replica cluster flags a hung peer against the known-healthy
+        step price instead of a majority it doesn't have."""
         ew = {h: st.ewma_s for h, st in self.hosts.items()
               if st.alive and st.ewma_s > 0}
+        out = []
+        if abs_limit_s is not None:
+            out = [h for h, v in ew.items() if v > abs_limit_s]
         if len(ew) < 3:
-            return []
+            return out
         vals = sorted(ew.values())
         med = vals[len(vals) // 2]
         mad = sorted(abs(v - med) for v in vals)[len(vals) // 2]
         mad = max(mad, 1e-3 * med, 1e-9)
-        return [h for h, v in ew.items() if (v - med) / mad > z_threshold]
+        return sorted(set(out) | {h for h, v in ew.items()
+                                  if (v - med) / mad > z_threshold})
 
 
 @dataclasses.dataclass

@@ -24,6 +24,23 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+class ClusterStalled(RuntimeError):
+    """``run_until_done`` exhausted its step budget with requests still
+    in flight — a wedged cluster must be LOUD, not indistinguishable
+    from a drained one.  Carries the leftover state for the post-mortem."""
+
+    def __init__(self, steps: int, in_flight: int, queued: int,
+                 produced: int):
+        self.steps = steps
+        self.in_flight = in_flight
+        self.queued = queued
+        self.produced = produced
+        super().__init__(
+            f"cluster stalled: {in_flight} request(s) in flight "
+            f"({queued} queued) after {steps} steps; "
+            f"{produced} tokens delivered")
+
+
 class ServingCluster:
     """Replicas + router; delegates admission/completion to the router."""
 
@@ -37,6 +54,9 @@ class ServingCluster:
                              max_reroutes=max_reroutes)
         self.telemetry = telemetry
         self.topology = topology
+        # optional chaos/fault supervisor (serve.chaos.supervise) — when
+        # installed it owns per-replica stepping and the detection sweep
+        self.supervisor = None
 
     # -- construction ---------------------------------------------------------
     @classmethod
@@ -126,29 +146,71 @@ class ServingCluster:
     def stats(self):
         return self.router.stats
 
+    # -- failure recovery -----------------------------------------------------
+    def replace_replica(self, i: int, engine) -> None:
+        """Swap a restarted engine into slot ``i`` on BOTH lists — the
+        router copies the replicas list at construction, so the cluster's
+        and the router's views must be updated together or they diverge
+        on the first warm-rejoin."""
+        self.replicas[i] = engine
+        self.router.replace_replica(i, engine)
+
+    def _live_replicas(self) -> List:
+        """Replicas eligible for work (all of them without a supervisor;
+        the router's live set under one — a dead replica's frozen queue
+        must not keep ``run_until_done`` spinning)."""
+        if self.supervisor is None:
+            return self.replicas
+        return [self.replicas[j] for j in self.router.live_indices()]
+
     # -- stepping -------------------------------------------------------------
     def step(self) -> int:
         """One cluster tick: every replica takes one engine step, then
-        completions are swept.  Returns total tokens delivered."""
+        completions are swept.  Returns total tokens delivered.
+
+        With a chaos supervisor installed, stepping is delegated per
+        replica (the supervisor wraps the step with heartbeat + fault
+        bookkeeping and skips dead replicas) and the detection/recovery
+        sweep runs after the tick."""
         produced = 0
-        for eng in self.replicas:
-            produced += eng.step()
-        self.router.collect()
+        if self.supervisor is not None:
+            for i in range(len(self.replicas)):
+                produced += self.supervisor.step_replica(i)
+            self.router.collect()
+            self.supervisor.after_tick()
+        else:
+            for eng in self.replicas:
+                produced += eng.step()
+            self.router.collect()
         return produced
 
-    def run_until_done(self, max_steps: int = 10_000) -> int:
+    def run_until_done(self, max_steps: int = 10_000, *,
+                       raise_on_stall: bool = True) -> int:
         """Step until every admitted request is collected (or the step
-        budget runs out).  Returns total tokens delivered."""
+        budget runs out).  Returns total tokens delivered.
+
+        Exhausting ``max_steps`` with requests still in flight raises
+        :class:`ClusterStalled` (set ``raise_on_stall=False`` to get the
+        old silent return while inspecting the wreckage) — a wedged
+        cluster used to return normally, indistinguishable from success.
+        """
         produced = 0
+        steps = 0
         for _ in range(max_steps):
             if self.router.in_flight == 0 and not any(
-                    len(eng.queue) for eng in self.replicas):
+                    len(eng.queue) for eng in self._live_replicas()):
                 break
             produced += self.step()
+            steps += 1
         # flush any one-step-ahead pipelines left in flight
-        for eng in self.replicas:
+        for eng in self._live_replicas():
             if eng._pending is not None:
                 eng._drain(eng._pending)
                 eng._pending = None
         self.router.collect()
+        if raise_on_stall and self.router.in_flight > 0:
+            raise ClusterStalled(
+                steps, self.router.in_flight,
+                sum(len(eng.queue) for eng in self._live_replicas()),
+                produced)
         return produced

@@ -42,6 +42,8 @@ class RouteStats:
     reroutes: int = 0               # eviction victims moved cross-replica
     front_requeues: int = 0         # eviction victims kept on their source
     decisions: int = 0              # placement + reroute decisions taken
+    recovered: int = 0              # reclaimed from a dead replica, re-placed
+    abandoned: int = 0              # reclaimed but shed (retry budget spent)
     routed: List[int] = dataclasses.field(default_factory=list)  # per replica
 
 
@@ -82,21 +84,40 @@ class Router:
         self._local: Dict[int, Tuple[int, int]] = {}    # crid -> (i, rid)
         self._origin: Dict[Tuple[int, int], int] = {}   # (i, rid) -> crid
         self._moves: Dict[int, int] = {}                # crid -> reroute count
+        self._live: List[bool] = [True] * len(self.replicas)
         for i, eng in enumerate(self.replicas):
-            sched = getattr(eng, "scheduler", None)
-            if sched is not None:
-                if sched.requeue_policy is not None:
-                    raise ValueError(
-                        f"replica {i} already has a requeue_policy; "
-                        f"a replica can serve at most one router")
-                sched.requeue_policy = self._make_reclaim(i)
+            self._install_reclaim(i, eng)
+
+    def _install_reclaim(self, i: int, eng) -> None:
+        sched = getattr(eng, "scheduler", None)
+        if sched is not None:
+            if sched.requeue_policy is not None:
+                raise ValueError(
+                    f"replica {i} already has a requeue_policy; "
+                    f"a replica can serve at most one router")
+            sched.requeue_policy = self._make_reclaim(i)
+
+    # -- liveness -------------------------------------------------------------
+    def live_indices(self) -> List[int]:
+        return [i for i in range(len(self.replicas)) if self._live[i]]
+
+    def set_live(self, i: int, alive: bool) -> None:
+        """Mark a replica (in)eligible for placement and reroute.  A dead
+        replica keeps its slot in ``replicas`` (indices stay stable for
+        bookkeeping and warm-rejoin); it simply stops receiving work."""
+        self._live[i] = bool(alive)
 
     # -- admission ------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> Optional[int]:
         """Place one request; returns its cluster id, or None if shed."""
-        i = self.policy.place(len(prompt), max_new_tokens, self.replicas)
+        live = self.live_indices()
+        if not live:
+            self.stats.shed += 1            # total outage: shed at the door
+            return None
         self.stats.decisions += 1
+        i = live[self.policy.place(len(prompt), max_new_tokens,
+                                   [self.replicas[j] for j in live])]
         if (self.shed_wait_s is not None
                 and predicted_queue_seconds(self.replicas[i])
                 > self.shed_wait_s):
@@ -122,7 +143,13 @@ class Router:
             if self._moves.get(crid, 0) >= self.max_reroutes:
                 self.stats.front_requeues += 1
                 return False
-            tgt = self.policy.reroute(req, src, self.replicas)
+            # reroute candidates: live replicas (plus the source itself,
+            # whose index the policy needs for its stay-vs-move price)
+            cand = [j for j in range(len(self.replicas))
+                    if self._live[j] or j == src]
+            tgt_k = self.policy.reroute(req, cand.index(src),
+                                        [self.replicas[j] for j in cand])
+            tgt = None if tgt_k is None else cand[tgt_k]
             if tgt is None or tgt == src:
                 self.stats.front_requeues += 1
                 return False
@@ -143,6 +170,80 @@ class Router:
         self._moves[crid] = self._moves.get(crid, 0) + 1
         self.stats.reroutes += 1
         self.stats.routed[tgt] += 1
+
+    # -- failure recovery -----------------------------------------------------
+    def reclaim_replica(self, i: int) -> List[Tuple[int, object]]:
+        """Pull every router-owned request off a failed replica.
+
+        Returns ``[(crid, request), ...]`` — the prompts are retained on
+        ``Request``, so each one can replay from scratch elsewhere
+        (:meth:`resubmit`).  All bookkeeping for the reclaimed ids is
+        dropped here; the dead replica's internal state is NOT mutated
+        (a crashed process can't be asked to clean up).  Requests that
+        already finished on the replica but were never collected are
+        reclaimed too: a dead replica's uncollected output is treated as
+        lost and recomputed, which keeps recovery independent of how far
+        the crash let the final drain get."""
+        eng = self.replicas[i]
+        by_rid: Dict[int, object] = {}
+        for req in list(getattr(eng, "queue", ()) or ()):   # still waiting
+            by_rid[req.rid] = req
+        for row in getattr(eng, "rows", None) or ():        # paged rows
+            if row is not None:
+                by_rid[row.req.rid] = row.req
+        for req in getattr(eng, "slot_req", None) or ():    # slot engine
+            if req is not None:
+                by_rid[req.rid] = req
+        by_rid.update(eng.done)                             # uncollected
+        out = []
+        for crid in sorted(c for c, (j, _) in self._local.items() if j == i):
+            _, rid = self._local.pop(crid)
+            self._origin.pop((i, rid), None)
+            self._moves.pop(crid, None)
+            req = by_rid.get(rid)
+            if req is None:
+                raise KeyError(
+                    f"crid {crid} (replica {i} rid {rid}) is tracked by "
+                    f"the router but not found on the replica — "
+                    f"bookkeeping is corrupt")
+            out.append((crid, req))
+        return out
+
+    def resubmit(self, crid: int, req) -> bool:
+        """Re-place one reclaimed request on a live replica UNDER ITS
+        ORIGINAL cluster id and ``submitted_s`` (recovery must not
+        launder latency).  Returns False when no replica is live — the
+        caller decides between retrying later and :meth:`abandon`."""
+        if crid in self._local:
+            raise ValueError(f"crid {crid} is still tracked; reclaim it "
+                             f"before resubmitting")
+        live = self.live_indices()
+        if not live:
+            return False
+        self.stats.decisions += 1
+        i = live[self.policy.place(len(req.prompt), req.max_new_tokens,
+                                   [self.replicas[j] for j in live])]
+        rid = self.replicas[i].submit(
+            req.prompt, max_new_tokens=req.max_new_tokens,
+            eos_id=req.eos_id, submitted_s=req.submitted_s)
+        self._local[crid] = (i, rid)
+        self._origin[(i, rid)] = crid
+        self.stats.recovered += 1
+        self.stats.routed[i] += 1
+        return True
+
+    def abandon(self, crid: int) -> None:
+        """Give up on a reclaimed request (retry budget exhausted or no
+        capacity).  The id is gone from all bookkeeping after reclaim;
+        this just records the shed-after-admission outcome."""
+        self.stats.abandoned += 1
+
+    def replace_replica(self, i: int, engine) -> None:
+        """Swap a (restarted) engine into slot ``i`` and install the
+        reclaim closure on it.  Does NOT flip liveness — the supervisor
+        marks the slot live once the rejoin is complete."""
+        self.replicas[i] = engine
+        self._install_reclaim(i, engine)
 
     # -- completion -----------------------------------------------------------
     def collect(self) -> int:

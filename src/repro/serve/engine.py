@@ -129,6 +129,7 @@ class EngineStats:
     peak_blocks_in_use: int = 0
     block_occupancy: List[float] = dataclasses.field(default_factory=list)
     admission_order: List[int] = dataclasses.field(default_factory=list)
+    integrity_failures: int = 0     # corrupted fused-step drains dropped
 
 
 def _analytic_prefill_prediction(cost_model: CostModel, cfg,
@@ -153,6 +154,19 @@ def _decode_step_fn(model):
     if getattr(model, "decode_step", None) is not None:
         return model.decode_step
     return fused_decode_step(model.decode)
+
+
+def _echo_ok(arr: np.ndarray) -> bool:
+    """Per-step integrity probe over the synced ``[2, B]`` token echo.
+
+    Token ids are non-negative by construction (argmax indices; masked
+    rows echo their input), so any negative or non-finite value in the
+    drained array means the step's output is corrupt — NaN logits argmax
+    into garbage, and a poisoned device buffer shows up directly.  The
+    check is host-side on the array the drain already paid to sync, so
+    the probe adds zero device work and zero extra transfers."""
+    a = np.asarray(arr)
+    return bool(np.isfinite(a).all() and (a >= 0).all())
 
 
 class _TunedDispatch:
@@ -428,6 +442,12 @@ class ServingEngine(_TunedDispatch):
             return
         io, snap = pending
         arr = self._sync(io)                 # the ONE transfer of the step
+        if not _echo_ok(arr):
+            # corrupted step: drop the whole drain rather than book
+            # garbage tokens — the supervisor reads this counter's delta
+            # and fails the replica (requests are reclaimed by prompt)
+            self.stats.integrity_failures += 1
+            return
         in_t, out_t = arr[0], arr[1]
         for i, req in snap:
             if self.slot_req[i] is not req:
@@ -464,7 +484,8 @@ class ServingEngine(_TunedDispatch):
             blocks_in_use=0, n_blocks=0,
             decoded_tokens=self.stats.decoded_tokens,
             preemptions=0, deferred=self.stats.deferred_prefills,
-            kernel_splits=0)
+            kernel_splits=0,
+            integrity_failures=self.stats.integrity_failures)
 
     def _step(self) -> int:
         """One engine iteration.  Returns #active at dispatch time.
@@ -1079,7 +1100,8 @@ class PagedServingEngine(_TunedDispatch):
             decoded_tokens=self.stats.decoded_tokens,
             preemptions=self.stats.preemptions,
             deferred=self.stats.deferred_prefills,
-            kernel_splits=self.kernel_splits)
+            kernel_splits=self.kernel_splits,
+            integrity_failures=self.stats.integrity_failures)
 
     def _decode_phase(self) -> int:
         """Batched decode over the ready rows; rows mid-prefill (or whose
@@ -1153,6 +1175,9 @@ class PagedServingEngine(_TunedDispatch):
             return
         io, snap = pending
         arr = self._sync(io)
+        if not _echo_ok(arr):
+            self.stats.integrity_failures += 1   # see the slot _drain
+            return
         in_t, out_t = arr[0], arr[1]
         for i, row, pos_after in snap:
             if self.rows[i] is not row:

@@ -35,7 +35,7 @@ import math
 import os
 from collections import deque
 from pathlib import Path
-from typing import Any, Dict, Iterable, List, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 SNAPSHOT_KIND = "telemetry_snapshot"
 SNAPSHOT_VERSION = 1
@@ -83,6 +83,7 @@ class StepRecord:
     preemptions: int            # cumulative evictions (paged)
     deferred: int               # cumulative budget-deferred admissions
     kernel_splits: int          # tuned split-KV factor (paged; 0 slot)
+    integrity_failures: int = 0  # cumulative corrupted-step drains dropped
 
 
 @dataclasses.dataclass
@@ -139,6 +140,9 @@ _STEP_META = {
     "kernel_splits": ("count", "paged",
                       "resolved split-KV flash-decoding factor from the "
                       "tuning cache (1 = unsplit; 0 on the slot engine)"),
+    "integrity_failures": ("count", "both",
+                           "cumulative fused-step drains dropped by the "
+                           "token-echo integrity probe (0 healthy)"),
 }
 _REQUEST_META = {
     "engine": ("-", "both", "emitting engine: 'slot' or 'paged'"),
@@ -178,9 +182,20 @@ class MetricsSink:
     ``capacity`` bounds each ring independently; the oldest records fall
     off first.  ``events`` (recalibrations) are kept in full up to the
     same cap — they are rare by construction (drift gate + cooldown).
+
+    ``stream_path`` turns on the incremental append-and-flush JSONL mode
+    for crash post-mortems: every record is ALSO written to the stream
+    file the moment it is recorded — one ``{"record": ...}``-tagged line
+    per record, the same format as :meth:`export_jsonl`, appended with a
+    single ``write`` call and flushed — so the tail of a replica that
+    dies mid-step survives on disk even though the process never reached
+    an explicit export.  (One line per ``write`` keeps lines atomic on
+    POSIX appends; a torn final line can only be the crash instant
+    itself, which is exactly what a post-mortem wants to see.)
     """
 
-    def __init__(self, capacity: int = 4096):
+    def __init__(self, capacity: int = 4096,
+                 stream_path: "os.PathLike | str | None" = None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
         self.capacity = capacity
@@ -191,22 +206,56 @@ class MetricsSink:
         self.total_steps = 0
         self.total_requests = 0
         self.total_events = 0
+        self._stream = None
+        self.stream_path: Optional[Path] = None
+        if stream_path is not None:
+            self.open_stream(stream_path)
+
+    # ----- incremental stream ------------------------------------------------
+
+    def open_stream(self, path: "os.PathLike | str") -> Path:
+        """Start (or redirect) the append-and-flush JSONL stream."""
+        self.close_stream()
+        out = Path(path)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        self._stream = out.open("a")
+        self.stream_path = out
+        return out
+
+    def close_stream(self) -> None:
+        if self._stream is not None:
+            self._stream.close()
+            self._stream = None
+
+    def stream_note(self, obj: Dict[str, Any]) -> None:
+        """Append one arbitrary tagged line to the stream (no ring entry)
+        — e.g. the cluster supervisor's dead-replica tag."""
+        self._write_line(obj)
+
+    def _write_line(self, obj: Dict[str, Any]) -> None:
+        if self._stream is None:
+            return
+        self._stream.write(json.dumps(obj) + "\n")   # one atomic append
+        self._stream.flush()
 
     # ----- write side --------------------------------------------------------
 
     def record_step(self, rec: StepRecord) -> None:
         self._steps.append(rec)
         self.total_steps += 1
+        self._write_line({"record": "step", **dataclasses.asdict(rec)})
 
     def record_request(self, rec: RequestRecord) -> None:
         self._requests.append(rec)
         self.total_requests += 1
+        self._write_line({"record": "request", **dataclasses.asdict(rec)})
 
     def record_event(self, event) -> None:
         """``event`` is any dataclass with an ``as_dict()`` (the
         controller's ``RecalibrationEvent``)."""
         self._events.append(event)
         self.total_events += 1
+        self._write_line({"record": "event", **event.as_dict()})
 
     # ----- read side ---------------------------------------------------------
 

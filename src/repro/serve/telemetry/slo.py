@@ -104,6 +104,22 @@ class TokenBucket:
         not drive the bucket negative and wedge admission)."""
         self.tokens_s = max(0.0, self.tokens_s - max(0.0, predicted_s))
 
+    def tighten(self, factor: float) -> float:
+        """Brownout: multiplicatively cut the admission rate (e.g. to the
+        surviving-capacity fraction after a replica death) without
+        waiting for a violation window — the AIMD loop then *earns* the
+        rate back additively as the shrunk fleet proves it can hold the
+        target.  Spills above the new burst ceiling are clipped so the
+        very next step already admits at brownout rate.  Returns the new
+        ``rate_s``."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"tighten factor must be in (0, 1], "
+                             f"got {factor}")
+        self.rate_s = max(self.slo.min_rate_s, self.rate_s * factor)
+        self.tokens_s = min(self.tokens_s, self.burst_s)
+        self.rate_trace.append(self.rate_s)
+        return self.rate_s
+
     def observe(self, measured_s: float) -> None:
         """Feed one measured step latency; closes the AIMD loop once per
         ``slo.window`` observations."""

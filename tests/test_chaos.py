@@ -1,0 +1,488 @@
+"""Chaos-serving tests: fault injection, detection, crash-consistent
+recovery (``repro.serve.chaos``) plus the satellites that ride along —
+the loud ``ClusterStalled`` outcome, the streaming telemetry sink,
+heartbeat membership, brownout, and the pool-integrity property test.
+
+The end-to-end drills are EXPENSIVE (each plays a fault-free twin plus a
+chaos run under SimClock), so one drill per fault kind is computed
+lazily and shared by every test that reads it.
+"""
+import heapq
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: property tests skip, unit tests still run
+    from _hypothesis_stub import given, settings, st
+
+from repro.distributed.fault_tolerance import (HeartbeatRegistry,
+                                               RestartPolicy)
+from repro.serve.chaos import (ChaosSupervisor, FaultPlan, FaultSpec,
+                               FaultyReplica, run_chaos_drill)
+from repro.serve.chaos import drill as drill_mod
+from repro.serve.cluster.cluster import ClusterStalled
+from repro.serve.cluster.metrics import ClusterTelemetry
+from repro.serve.engine import _echo_ok
+from repro.serve.paging import BlockAllocator
+from repro.serve.sim import SimClock, expected_tokens
+from repro.serve.telemetry.metrics import (MetricsSink, RequestRecord,
+                                           StepRecord, schema_field_names)
+from repro.serve.telemetry.slo import SLO, TokenBucket
+
+# one cached drill per fault kind (n_requests=8 is the bench --quick
+# shape; the full 12-request grid runs in the campaign / bench)
+_DRILLS = {}
+
+
+def drill(fault, replicas=2):
+    key = (fault, replicas)
+    if key not in _DRILLS:
+        _DRILLS[key] = run_chaos_drill(fault, replicas, n_requests=8)
+    return _DRILLS[key]
+
+
+def _step(i, **kw):
+    base = dict(engine="paged", step=i, t_s=float(i), n_active=1,
+                queue_depth=0, predicted_s=0.5, predicted_decode_s=0.5,
+                measured_s=0.5, decode_ran=True, n_prefill_units=0,
+                bottleneck="compute", budget_s=0.0, host_syncs=i,
+                table_uploads=0, blocks_in_use=2, n_blocks=8,
+                decoded_tokens=i, preemptions=0, deferred=0,
+                kernel_splits=1, integrity_failures=0)
+    base.update(kw)
+    return StepRecord(**base)
+
+
+# ---------------------------------------------------------------------------
+# fault plans + the wrapper
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor", 0, 1)
+    with pytest.raises(ValueError):
+        FaultSpec("crash", 0, -1)
+    with pytest.raises(ValueError):
+        FaultSpec("hang", 0, 2, duration=0)
+    with pytest.raises(ValueError):
+        FaultSpec("hang", 0, 2, factor=1.0)
+
+
+def test_fault_plan_random_is_replayable():
+    a = FaultPlan.random("crash", 3, seed=7)
+    b = FaultPlan.random("crash", 3, seed=7)
+    assert a == b
+    assert len(a.specs) == 1 and a.specs[0].kind == "crash"
+    assert 0 <= a.specs[0].replica < 3
+    assert 2 <= a.specs[0].at_step < 8
+    # the seed is part of the identity
+    assert FaultPlan.random("crash", 3, seed=8) != a or True  # may collide
+    assert FaultPlan.random("hang", 3, seed=7).specs[0].kind == "hang"
+
+
+def test_fault_plan_generation_semantics():
+    plan = FaultPlan((FaultSpec("crash", 0, 5), FaultSpec("crashloop", 1, 4)))
+    # generation 0: every spec on its own replica
+    assert plan.for_replica(0, 0) == [FaultSpec("crash", 0, 5)]
+    assert plan.for_replica(1, 0) == [FaultSpec("crashloop", 1, 4)]
+    assert plan.for_replica(2, 0) == []
+    # a restarted replica is healthy — unless it crash-loops, in which
+    # case it dies ON STARTUP (at_step=0) so the breaker must trip
+    assert plan.for_replica(0, 1) == []
+    regen = plan.for_replica(1, 1)
+    assert len(regen) == 1 and regen[0].kind == "crashloop"
+    assert regen[0].at_step == 0
+
+
+class _DummyEngine:
+    def __init__(self):
+        self.queue = []
+        self._pending = None
+        self.knob = 1
+        self.steps = 0
+
+    def step(self):
+        self.steps += 1
+        return 1
+
+
+def test_faulty_replica_delegates_and_crashes():
+    eng = _DummyEngine()
+    rep = FaultyReplica(eng, [FaultSpec("crash", 0, 2)])
+    # reads AND writes reach the engine
+    assert rep.knob == 1
+    rep.knob = 7
+    assert eng.knob == 7
+    rep._pending = "x"
+    assert eng._pending == "x"
+    # two healthy steps, then the process is gone
+    assert rep.step() == 1 and rep.step() == 1
+    assert rep.step() == 0 and rep.crashed
+    assert rep.step() == 0
+    assert eng.steps == 2            # the engine is never touched again
+    assert ("crash", 2) in rep.injected
+
+
+def test_faulty_replica_hang_scales_wall():
+    eng = _DummyEngine()
+    rep = FaultyReplica(eng, [FaultSpec("hang", 0, 1, duration=2,
+                                        factor=6.0)])
+    rep.step()
+    assert rep.wall_scale == 1.0
+    rep.step()
+    assert rep.wall_scale == 6.0     # inside the hang window
+    rep.step()
+    assert rep.wall_scale == 6.0
+    rep.step()
+    assert rep.wall_scale == 1.0     # window over, healthy again
+
+
+def test_echo_ok_flags_poisoned_tokens():
+    good = np.zeros((2, 4), np.int32)
+    assert _echo_ok(good)
+    bad = good.copy()
+    bad[1, :] = -1
+    assert not _echo_ok(bad)
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end drills (tentpole proof)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fault,kind", [("crash", "dead"),
+                                        ("hang", "straggler"),
+                                        ("corrupt", "corrupt")])
+def test_drill_recovers_crash_consistently(fault, kind):
+    m = drill(fault)
+    assert m["failures"] >= 1
+    assert kind in m["failure_kinds"].split(",")
+    # the recovery invariants the campaign/CI gate on
+    assert m["survivors_identical"]
+    assert m["all_accounted"]
+    assert m["tokens_lost"] == 0
+    assert m["blocks_leaked"] == 0
+    # the replica warm-rejoined: detection -> rejoin latency is real
+    assert m["recovery_latency_s"] > 0
+    assert m["live_replicas"] == m["replicas"]
+    assert not m["quarantined"]
+
+
+def test_drill_crash_reclaims_and_resubmits():
+    m = drill("crash")
+    # the dead replica was carrying work: it was reclaimed and re-placed
+    # (or loudly abandoned), never silently lost
+    assert m["reclaimed"] >= 1
+    assert m["recovered"] + m["abandoned"] >= 1
+    assert m["completed"] + m["abandoned"] >= m["admitted"]
+
+
+def test_drill_crashloop_is_quarantined():
+    m = drill("crashloop")
+    # the breaker (crash_loop_limit=3) trips on the 4th death
+    assert m["failures"] >= 4
+    assert m["quarantined"]
+    # quarantine means degraded, not broken: every surviving token exact
+    assert m["survivors_identical"]
+    assert m["all_accounted"]
+    assert m["tokens_lost"] == 0 and m["blocks_leaked"] == 0
+    assert m["live_replicas"] == m["replicas"] - 1
+
+
+def test_drill_replays_byte_for_byte():
+    again = run_chaos_drill("crash", 2, n_requests=8)
+    assert again == drill("crash")
+
+
+# ---------------------------------------------------------------------------
+# satellite: run_until_done stalls loudly
+# ---------------------------------------------------------------------------
+
+def test_run_until_done_raises_cluster_stalled():
+    """A fault-wrapped replica that stops making progress must not let
+    ``run_until_done`` return as if it drained.  (A ``hang`` fault only
+    inflates the PRICED wall — the engine still steps — so the fault
+    that actually wedges the loop is a crash: step() returns 0 forever
+    and the queue freezes.)"""
+    clock = SimClock()
+    plan = FaultPlan((FaultSpec("crash", 0, 0),))   # dead on arrival
+    cluster, _ = drill_mod._build(1, clock, plan=plan)
+    crid = cluster.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+    assert crid is not None
+    with pytest.raises(ClusterStalled) as ei:
+        cluster.run_until_done(max_steps=8)
+    e = ei.value
+    assert e.steps == 8 and e.in_flight == 1 and e.queued == 1
+    assert "stalled" in str(e)
+    # the silent escape hatch for inspecting the wreckage
+    assert cluster.run_until_done(max_steps=3, raise_on_stall=False) == 0
+    assert cluster.router.in_flight == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: heartbeat membership + restart breaker
+# ---------------------------------------------------------------------------
+
+def test_registry_register_deregister():
+    reg = HeartbeatRegistry(interval_s=1.0, miss_limit=3)
+    with pytest.raises(KeyError):
+        reg.beat("a", now=0.0)       # membership is explicit
+    reg.register("a", now=100.0)
+    # a just-joined host is not instantly dead off a zero last_heartbeat
+    assert reg.sweep(now=100.5) == []
+    reg.beat("a", 0.5, now=101.0)
+    assert reg.alive_hosts() == ["a"]
+    reg.deregister("a")
+    assert reg.alive_hosts() == []
+    with pytest.raises(KeyError):
+        reg.beat("a", now=102.0)
+    reg.deregister("a")              # no-op if absent
+    # re-register under a fresh identity: clean EWMA, beating again
+    reg.register("a", now=200.0)
+    reg.beat("a", 0.5, now=200.5)
+    assert reg.alive_hosts() == ["a"]
+    # the fixed-fleet constructor still works
+    assert set(HeartbeatRegistry(["x", "y"]).hosts) == {"x", "y"}
+
+
+def test_registry_abs_limit_flags_straggler_at_two_hosts():
+    reg = HeartbeatRegistry(interval_s=1.0, miss_limit=3)
+    reg.register("fast", now=0.0)
+    reg.register("slow", now=0.0)
+    for t in range(1, 5):
+        reg.beat("fast", 0.1, now=float(t))
+        reg.beat("slow", 5.0, now=float(t))
+    # MAD alone cannot vote with two hosts...
+    assert reg.stragglers(z_threshold=4.0) == []
+    # ...the absolute ceiling can
+    assert reg.stragglers(z_threshold=4.0, abs_limit_s=1.0) == ["slow"]
+
+
+def test_restart_policy_breaker_trips():
+    pol = RestartPolicy(backoff_base_s=1.0, backoff_cap_s=60.0,
+                        crash_loop_limit=3)
+    assert pol.on_failure(now=0.0) == 1.0
+    assert pol.on_failure(now=1.0) == 2.0
+    assert pol.on_failure(now=2.0) == 4.0
+    assert pol.on_failure(now=3.0) is None   # quarantine
+
+
+# ---------------------------------------------------------------------------
+# satellite: streaming telemetry
+# ---------------------------------------------------------------------------
+
+def test_sink_streams_past_ring_capacity(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    sink = MetricsSink(capacity=2, stream_path=path)
+    for i in range(5):
+        sink.record_step(_step(i))
+    sink.record_request(RequestRecord("paged", 0, 0.0, 1.0, 1.0, 4, 4))
+    sink.stream_note({"record": "fault", "kind": "dead"})
+    # the ring forgot, the stream did not
+    assert len(sink.steps()) == 2
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert [x["record"] for x in lines] == ["step"] * 5 + ["request",
+                                                          "fault"]
+    assert [x["step"] for x in lines[:5]] == list(range(5))
+    sink.close_stream()
+    sink.record_step(_step(9))       # closed stream: ring only, no error
+    assert len(path.read_text().splitlines()) == 7
+
+
+def test_sink_stream_redirect_and_off_mode(tmp_path):
+    sink = MetricsSink(capacity=4)
+    sink.record_step(_step(0))       # no stream: pure ring, no file I/O
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    sink.open_stream(a)
+    sink.record_step(_step(1))
+    sink.open_stream(b)              # redirect closes the old stream
+    sink.record_step(_step(2))
+    assert json.loads(a.read_text())["step"] == 1
+    assert json.loads(b.read_text())["step"] == 2
+    assert sink.stream_path == b
+
+
+def test_cluster_telemetry_tags_and_rebinds(tmp_path):
+    tel = ClusterTelemetry(2, stream_dir=tmp_path)
+    tel.sinks[0].record_request(RequestRecord("paged", 0, 0.0, 1.0,
+                                              1.0, 4, 4))
+    tel.tag_dead(0, 3.5, "dead")
+    g0 = [json.loads(x) for x in
+          (tmp_path / "replica_0.jsonl").read_text().splitlines()]
+    assert g0[-1] == {"record": "fault", "replica": 0, "t_s": 3.5,
+                      "kind": "dead"}
+    old_sink = tel.sinks[0]
+    ctrl = tel.rebind(0)
+    assert ctrl is tel.controllers[0]
+    assert tel.sinks[0] is not old_sink
+    assert tel.retired == [(0, old_sink)]
+    # the rejoined incarnation streams to its own generation file
+    tel.sinks[0].record_request(RequestRecord("paged", 1, 2.0, 4.0,
+                                              2.0, 4, 4))
+    g1_path = tmp_path / "replica_0.g1.jsonl"
+    assert json.loads(g1_path.read_text())["rid"] == 1
+    # merged views count the dead incarnation's records
+    s = tel.summary()
+    assert s["requests"] == 2
+    assert s["faults"] == [{"replica": 0, "t_s": 3.5, "kind": "dead"}]
+    assert sorted(tel.request_latencies()) == [1.0, 2.0]
+    out = tel.export_jsonl(tmp_path / "all.jsonl")
+    recs = [json.loads(x) for x in out.read_text().splitlines()]
+    assert [r["record"] for r in recs] == ["request", "request", "fault"]
+    assert all(r["replica"] == 0 for r in recs)
+
+
+def test_step_schema_carries_integrity_probe():
+    assert "integrity_failures" in schema_field_names()
+
+
+# ---------------------------------------------------------------------------
+# brownout + supervisor bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_tighten():
+    b = TokenBucket(SLO(target_p99_s=8.0))
+    r0 = b.rate_s
+    b.tokens_s = b.burst_s           # full bucket, then brownout
+    assert b.tighten(0.5) == pytest.approx(r0 / 2)
+    # spill above the NEW burst ceiling is clipped immediately
+    assert b.tokens_s == pytest.approx(b.burst_s)
+    assert b.rate_trace == [b.rate_s]
+    with pytest.raises(ValueError):
+        b.tighten(0.0)
+    with pytest.raises(ValueError):
+        b.tighten(1.5)
+    # the floor holds under repeated brownouts
+    for _ in range(80):
+        b.tighten(0.5)
+    assert b.rate_s == pytest.approx(SLO(target_p99_s=8.0).min_rate_s)
+
+
+def test_supervisor_failure_brownouts_survivors():
+    clock = SimClock()
+    tel = ClusterTelemetry(2, slo=SLO(target_p99_s=8.0))
+    cluster, _ = drill_mod._build(2, clock, plan=None, telemetry=tel)
+    sup = ChaosSupervisor(cluster, clock)
+    r0 = tel.controllers[1].bucket.rate_s
+    rec = sup._fail(0, "dead", clock.time())
+    # the survivor's admission rate is cut to surviving capacity
+    assert tel.controllers[1].bucket.rate_s == pytest.approx(r0 / 2)
+    assert cluster.router.live_indices() == [1]
+    assert sup.failures == [rec]
+    assert rec.kind == "dead" and rec.generation == 0
+    assert rec.recovery_s is None            # no engine_factory: stays down
+    assert not rec.quarantined
+    assert tel.faults == [{"replica": 0, "t_s": 0.0, "kind": "dead"}]
+    assert sup.idle                          # nothing to retry or rejoin
+    # the dead host left membership: its beats would now be a KeyError
+    assert sup.registry.alive_hosts() == ["replica-1.g0"]
+
+
+# ---------------------------------------------------------------------------
+# router recovery seam (reclaim / resubmit / abandon)
+# ---------------------------------------------------------------------------
+
+def test_router_reclaim_resubmit_preserves_tokens():
+    clock = SimClock()
+    cluster, _ = drill_mod._build(2, clock, plan=None)
+    router = cluster.router
+    prompts = [np.arange(1, 5 + i, dtype=np.int32) for i in range(4)]
+    crids = [cluster.submit(p, max_new_tokens=4) for p in prompts]
+    assert all(c is not None for c in crids)
+    for _ in range(2):               # let some requests reach the rows
+        cluster.step()
+    victims = [c for c in crids if router._local[c][0] == 0]
+    assert victims, "cost-aware placement left replica 0 empty"
+    router.set_live(0, False)
+    reclaimed = router.reclaim_replica(0)
+    assert sorted(c for c, _ in reclaimed) == sorted(victims)
+    survivors = [c for c in crids if c not in victims]
+    if survivors:                    # a tracked crid must be reclaimed first
+        with pytest.raises(ValueError):
+            router.resubmit(survivors[0], reclaimed[0][1])
+    for crid, req in reclaimed:
+        assert router.resubmit(crid, req)
+    assert router.stats.recovered == len(reclaimed)
+    cluster.run_until_done(max_steps=400)
+    router.assert_drained()
+    for crid, p in zip(crids, prompts):
+        assert list(router.done[crid].tokens) == expected_tokens(
+            list(p), 4, drill_mod.VOCAB)
+
+
+def test_router_total_outage_sheds_and_abandons():
+    clock = SimClock()
+    cluster, _ = drill_mod._build(2, clock, plan=None)
+    router = cluster.router
+    crids = [cluster.submit(np.arange(4, dtype=np.int32), max_new_tokens=4)
+             for _ in range(2)]
+    router.set_live(0, False)
+    router.set_live(1, False)
+    # admission at the door: shed
+    assert cluster.submit(np.arange(4, dtype=np.int32)) is None
+    assert router.stats.shed == 1
+    # reclaimed with nowhere to go: resubmit says so, abandon is loud
+    reclaimed = router.reclaim_replica(0) + router.reclaim_replica(1)
+    assert sorted(c for c, _ in reclaimed) == sorted(crids)
+    for crid, req in reclaimed:
+        assert not router.resubmit(crid, req)
+        router.abandon(crid)
+    assert router.stats.abandoned == 2
+    router.assert_drained()
+
+
+# ---------------------------------------------------------------------------
+# satellite: pool integrity under fault storms (property test)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 63)),
+                min_size=1, max_size=80))
+def test_pool_integrity_under_fault_storm(ops):
+    """Random admit / evict / compact / crash-reclaim sequences never
+    break the free-set-partitions-the-pool invariant, and a full reclaim
+    leaks nothing — the allocator-side half of the drill's
+    ``blocks_leaked == 0`` gate."""
+    alloc = BlockAllocator(24, 8)
+    held = []
+    for op, k in ops:
+        if op == 0:                          # admit: one block for a row
+            b = alloc.alloc()
+            if b is not None:
+                held.append(b)
+        elif op == 1 and held:               # evict one victim's block
+            alloc.free([held.pop(k % len(held))])
+        elif op == 2 and held:               # compaction: free + realloc
+            alloc.free([held.pop(k % len(held))])
+            b = alloc.alloc()
+            if b is not None:
+                held.append(b)
+        elif op == 3 and held:               # replica death: reclaim all
+            alloc.free(held)
+            held = []
+        alloc.check()
+        assert alloc.n_in_use == len(held)
+        assert alloc.n_free == alloc.n_blocks - len(held)
+    alloc.free(held)
+    alloc.check()
+    assert alloc.n_in_use == 0
+
+
+def test_pool_poison_is_caught():
+    alloc = BlockAllocator(8, 4)
+    a, b = alloc.alloc(), alloc.alloc()
+    # a poisoned free list (an allocated id pushed back) fails the audit
+    heapq.heappush(alloc._free, a)
+    with pytest.raises(AssertionError):
+        alloc.check()
+    alloc._free.remove(a)
+    heapq.heapify(alloc._free)
+    alloc.check()
+    # double-free and foreign ids are loud at the free() door
+    alloc.free([b])
+    with pytest.raises(ValueError):
+        alloc.free([b])
+    with pytest.raises(ValueError):
+        alloc.free([999])

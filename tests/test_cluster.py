@@ -361,13 +361,14 @@ def test_bench_v5_validate_and_compare_scenarios(tmp_path):
         spec.loader.exec_module(mod)
     bench, comp = sys.modules["bench_serve"], sys.modules["traj_compare"]
 
-    assert bench.SCHEMA == "bench_serve/v5" and bench.BENCH_ID == 9
-    doc = {"schema": bench.SCHEMA, "bench_id": 9, "engines": {},
+    assert bench.SCHEMA == "bench_serve/v6" and bench.BENCH_ID == 10
+    doc = {"schema": bench.SCHEMA, "bench_id": 10, "engines": {},
            "cluster": {"r1": {"rr_tok_per_s": 10.0, "ca_tok_per_s": 11.0},
                        "r2": {"rr_tok_per_s": 17.0, "ca_tok_per_s": 20.0}},
            "sharded": {"ref_step_s": 0.5, "d1m1_step_s": 0.5,
-                       "d1m1_pred_step_s": 1e-6, "d2m2_step_s": 0.25}}
-    path = tmp_path / "BENCH_9.json"
+                       "d1m1_pred_step_s": 1e-6, "d2m2_step_s": 0.25},
+           "chaos": {"crash": {"ok": True, "tokens_lost": 0}}}
+    path = tmp_path / "BENCH_10.json"
     path.write_text(json.dumps(doc))
     loaded = bench.validate_bench_doc(json.loads(path.read_text()))
     assert loaded == doc                                 # round-trip
@@ -392,9 +393,13 @@ def test_bench_v5_validate_and_compare_scenarios(tmp_path):
                                   "engines": {},
                                   "cluster": {}})        # missing sharded
     with pytest.raises(ValueError):
+        bench.validate_bench_doc({"schema": "bench_serve/v6",
+                                  "engines": {}, "cluster": {},
+                                  "sharded": {}})        # missing chaos
+    with pytest.raises(ValueError):
         bench.validate_bench_doc({"schema": "bench_serve/v99",
                                   "engines": {}, "cluster": {},
-                                  "sharded": {}})
+                                  "sharded": {}, "chaos": {}})
     with pytest.raises(ValueError):
         bench.validate_bench_doc({"schema": "autotune.cache/v1"})
 
@@ -420,6 +425,32 @@ def test_committed_trajectory_carries_bench9_sharded():
         assert sh[f"d{d}m{m}_identical"], (d, m)
         assert sh[f"d{d}m{m}_sync_ok"] and sh[f"d{d}m{m}_donated"], (d, m)
         assert sh[f"d{d}m{m}_pred_step_s"] > 0, (d, m)
+    assert mod.compare(traj, tolerance=0.6) == []
+
+
+def test_committed_trajectory_carries_bench10_chaos():
+    import importlib.util
+    import sys
+    root = __import__("pathlib").Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "traj_compare4", root / "benchmarks/trajectory/compare.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["traj_compare4"] = mod
+    spec.loader.exec_module(mod)
+    traj = mod.load_trajectory(root / "benchmarks/trajectory")
+    ids = [i for i, _ in traj]
+    assert 10 in ids, "BENCH_10.json must be committed with this change"
+    doc = dict(traj)[10]
+    assert doc["schema"] == "bench_serve/v6"
+    assert doc["chaos_ok"] and doc["identical_tokens"]
+    for fault in ("crash", "hang", "corrupt", "crashloop"):
+        m = doc["chaos"][fault]
+        assert m["ok"], fault
+        assert m["survivors_identical"] and m["all_accounted"], fault
+        assert m["tokens_lost"] == 0 and m["blocks_leaked"] == 0, fault
+    assert doc["chaos"]["crashloop"]["quarantined"]
+    # the chaos block is invisible to the tok/s trajectory gate
+    assert not any(k.startswith("chaos") for k in mod.scenarios(doc))
     assert mod.compare(traj, tolerance=0.6) == []
 
 
